@@ -1,0 +1,69 @@
+"""Shared benchmark plumbing: timed calls + the trained KWS/VWW/IC
+impulses the paper's tables revolve around."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.blocks import make_dsp_block, make_learn_block
+from repro.core.impulse import Impulse
+from repro.data.dataset import Dataset
+from repro.data.synthetic import keyword_audio
+
+KWS_SAMPLES = 8000
+
+
+def time_call(fn: Callable, *args, iters: int = 10, warmup: int = 2
+              ) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def kws_dataset() -> Dataset:
+    ds = Dataset()
+    ds.add_many(keyword_audio(n_per_class=24, n_classes=4,
+                              n_samples=KWS_SAMPLES, seed=0))
+    return ds
+
+
+def trained_kws_impulse(ds: Dataset = None, epochs: int = 5) -> Impulse:
+    ds = ds or kws_dataset()
+    imp = Impulse(make_dsp_block("mfcc", n_mels=32, n_coeffs=10),
+                  make_learn_block("conv1d-stack", n_blocks=2, ch_first=16,
+                                   ch_last=64, n_classes=4),
+                  input_shape=KWS_SAMPLES)
+    imp.init(jax.random.key(0))
+    xtr, ytr = ds.arrays("train")
+    imp.fit((np.asarray(xtr), np.asarray(ytr)), epochs=epochs,
+            batch_size=16, lr=2e-3)
+    imp.quantize(np.asarray(xtr[:16]))
+    return imp
+
+
+def vww_impulse() -> Impulse:
+    """MobileNetV1-0.25 on 64x64x3 (structure benchmark; not trained)."""
+    imp = Impulse(make_dsp_block("image_norm"),
+                  make_learn_block("mobilenetv1", n_classes=2,
+                                   width_mult=0.25),
+                  input_shape=(64, 64, 3))
+    return imp.init(jax.random.key(1))
+
+
+def ic_impulse() -> Impulse:
+    """CIFAR CNN on 32x32x3 (structure benchmark; not trained)."""
+    imp = Impulse(make_dsp_block("image_norm"),
+                  make_learn_block("cifar-cnn", n_classes=10),
+                  input_shape=(32, 32, 3))
+    return imp.init(jax.random.key(2))
+
+
+def emit(rows: List[Tuple[str, float, str]]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

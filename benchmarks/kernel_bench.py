@@ -1,0 +1,70 @@
+"""Kernel microbenchmarks: ref-path timings on this host + the shapes
+the Pallas kernels tile for on TPU (correctness is tests/test_kernels.py;
+wall-clock Pallas numbers require real hardware)."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ops
+
+
+def main() -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    rng = np.random.RandomState(0)
+
+    # int8 matmul vs float matmul (serving path)
+    m, k, n = 256, 1024, 1024
+    xq = jnp.asarray(rng.randint(-127, 128, (m, k)), jnp.int8)
+    wq = jnp.asarray(rng.randint(-127, 128, (k, n)), jnp.int8)
+    xs = jnp.ones((m,), jnp.float32)
+    ws = jnp.ones((n,), jnp.float32)
+    xf = jnp.asarray(rng.randn(m, k), jnp.float32)
+    wf = jnp.asarray(rng.randn(k, n), jnp.float32)
+    t_int8 = common.time_call(
+        jax.jit(lambda a, b, c, d: ops.int8_matmul(a, b, c, d)),
+        xq, wq, xs, ws)
+    t_f32 = common.time_call(jax.jit(lambda a, b: a @ b), xf, wf)
+    rows.append(("kernel/int8_matmul_ref", t_int8, f"{m}x{k}x{n}"))
+    rows.append(("kernel/f32_matmul", t_f32, f"{m}x{k}x{n}"))
+
+    # flash attention ref vs naive full attention
+    b, s, h, d = 1, 2048, 4, 64
+    q = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)
+    kk = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)
+    t_ref = common.time_call(
+        jax.jit(lambda a, b_, c: ops.flash_attention(a, b_, c)), q, kk, v)
+    rows.append(("kernel/flash_attention_ref", t_ref, f"S={s} D={d}"))
+
+    # mamba scan ref
+    bs, ss, dd, nn = 1, 1024, 256, 16
+    x = jnp.asarray(rng.randn(bs, ss, dd), jnp.float32) * 0.3
+    dt = jax.nn.softplus(jnp.asarray(rng.randn(bs, ss, dd), jnp.float32))
+    bm = jnp.asarray(rng.randn(bs, ss, nn), jnp.float32) * 0.3
+    cm = jnp.asarray(rng.randn(bs, ss, nn), jnp.float32) * 0.3
+    a = -jnp.exp(jnp.asarray(rng.randn(dd, nn), jnp.float32) * 0.2)
+    t_scan = common.time_call(
+        jax.jit(lambda *args: ops.mamba_scan(*args)[0]), x, dt, bm, cm, a)
+    rows.append(("kernel/mamba_scan_ref", t_scan, f"S={ss} D={dd} N={nn}"))
+
+    # mel frontend
+    frames = jnp.asarray(rng.randn(128, 512), jnp.float32)
+    from repro.dsp import filterbank as fb
+    window = jnp.asarray(np.hanning(512), jnp.float32)
+    cos, sin = fb.dft_matrices(512)
+    mel = jnp.asarray(fb.mel_filterbank(257, 40, 16000))
+    t_mel = common.time_call(
+        jax.jit(lambda f: ops.mel_frontend(f, window, jnp.asarray(cos),
+                                           jnp.asarray(sin), mel)), frames)
+    rows.append(("kernel/mel_frontend_ref", t_mel, "128 frames x 512"))
+    common.emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

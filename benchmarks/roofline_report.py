@@ -1,0 +1,49 @@
+"""Roofline table over the dry-run matrix (§Roofline source of truth).
+
+Reads experiments/dryrun/*.json and prints every cell's three terms,
+bottleneck, useful-flops ratio and roofline fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from typing import List, Tuple
+
+from benchmarks import common
+
+
+def main(dryrun_dir: str = "experiments/dryrun") -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    files = sorted(glob.glob(f"{dryrun_dir}/*.json"))
+    if not files:
+        rows.append(("roofline/missing", 0.0,
+                     "run: PYTHONPATH=src python -m repro.launch.dryrun "
+                     "--all --mesh both"))
+        common.emit(rows)
+        return rows
+    for f in files:
+        d = json.load(open(f))
+        tag = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}"
+        if d["status"] == "skipped":
+            rows.append((tag, 0.0, "skipped_by_design"))
+            continue
+        if d["status"] != "ok":
+            rows.append((tag, 0.0, f"ERROR {d.get('error','')[:60]}"))
+            continue
+        r = d["roofline"]
+        t_total = max(r["t_compute_s"],
+                      r.get("t_memory_min_s", r["t_memory_s"]),
+                      r["t_collective_s"])
+        rows.append((
+            tag, t_total * 1e6,
+            f"bneck={r['bottleneck']} tc={r['t_compute_s']:.3f} "
+            f"tmem=[{r.get('t_memory_min_s', 0):.3f},{r['t_memory_s']:.3f}] "
+            f"tcoll={r['t_collective_s']:.3f} useful="
+            f"{r['useful_flops_ratio']:.3f} frac={r['roofline_fraction']:.4f} "
+            f"hbm={d['memory']['per_device_hbm_gib']}GiB"))
+    common.emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark aggregator: one module per paper table + framework extras.
+
+Prints ``name,us_per_call,derived`` CSV rows (per deliverable spec).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (calibration_bench, kernel_bench,
+                            roofline_report, table2_inference_times,
+                            table3_eon_tuner, table4_memory)
+    suites = [
+        ("table2_inference_times", table2_inference_times.main),
+        ("table3_eon_tuner", table3_eon_tuner.main),
+        ("table4_memory", table4_memory.main),
+        ("calibration_bench", calibration_bench.main),
+        ("kernel_bench", kernel_bench.main),
+        ("roofline_report", roofline_report.main),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites:
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Paper Table 2: preprocessing + inference times, float vs int8, across
+heterogeneous targets.
+
+Two result families per (task × target × precision):
+* ``est``  — the platform's static latency estimate (C2) for the MCU
+  targets, with the Table-2 KWS-nano cells as the fit anchor and every
+  other cell a *prediction*;
+* ``cpu``  — measured µs on this host for the same impulse (DSP vs NN
+  split), demonstrating the measurement path the platform pairs with
+  estimates.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import estimator as est
+from repro.core.quantize import fake_quant_params
+
+
+def main() -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    tasks = {
+        "kws": common.trained_kws_impulse(),
+        "vww": common.vww_impulse(),
+        "ic": common.ic_impulse(),
+    }
+    for task, imp in tasks.items():
+        # measured on this host
+        if isinstance(imp.input_shape, int):
+            raw = np.random.RandomState(0).randn(
+                1, imp.input_shape).astype(np.float32)
+        else:
+            raw = np.random.RandomState(0).randn(
+                1, *imp.input_shape).astype(np.float32)
+        import jax
+        dsp_us = common.time_call(jax.jit(imp.dsp.apply), raw)
+        feats = imp.dsp.apply(raw)
+        nn_us = common.time_call(
+            jax.jit(lambda f: imp.learn.apply(imp.params, f)), feats)
+        rows.append((f"table2/{task}/cpu/dsp", dsp_us, "measured"))
+        rows.append((f"table2/{task}/cpu/nn_float", nn_us, "measured"))
+        if imp.qparams is not None:
+            fq = fake_quant_params(imp.qparams)
+            nn8_us = common.time_call(
+                jax.jit(lambda f: imp.learn.apply(fq, f)), feats)
+            rows.append((f"table2/{task}/cpu/nn_int8", nn8_us,
+                         "measured-fakequant"))
+        # static estimates per MCU target
+        for target in est.TARGETS:
+            for int8 in (False, True):
+                e = est.estimate_impulse(imp, target, engine="eon",
+                                         int8=int8)
+                tag = "int8" if int8 else "float"
+                rows.append((
+                    f"table2/{task}/{target}/{tag}/total",
+                    e.total_latency_ms * 1e3,
+                    f"dsp={e.dsp_latency_ms:.1f}ms nn="
+                    f"{e.nn_latency_ms:.1f}ms fits={e.fits}"))
+    common.emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Table 3: the EON-Tuner-explored (DSP × NN) design space for KWS.
+
+Runs the actual tuner (random sample → resource screen → short training)
+and prints the Table-3 columns: preprocessing config, model, accuracy,
+DSP/NN/total latency, RAM, flash.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.tuner import EONTuner
+
+
+def main() -> List[Tuple[str, float, str]]:
+    ds = common.kws_dataset()
+    xtr, ytr = ds.arrays("train")
+    xva, yva = ds.arrays("val")
+    tuner = EONTuner(input_samples=common.KWS_SAMPLES, n_classes=4,
+                     target="nano33ble", engine="eon", int8=False, seed=0)
+    ranked = tuner.search((np.asarray(xtr), np.asarray(ytr)),
+                          (np.asarray(xva), np.asarray(yva)),
+                          n_samples=8, epochs=3)
+    rows: List[Tuple[str, float, str]] = []
+    for cand in ranked:
+        e = cand.estimate
+        rows.append((
+            f"table3/{cand.describe().replace(',', ';').replace(' ', '')}",
+            e.total_latency_ms * 1e3,
+            f"acc={cand.accuracy:.2f} dsp={e.dsp_latency_ms:.0f}ms "
+            f"nn={e.nn_latency_ms:.0f}ms ram={e.ram_kb:.0f}kB "
+            f"flash={e.flash_kb:.0f}kB"))
+    common.emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Architecture config registry: one module per assigned architecture.
+
+``get(arch_id)`` returns the FULL config; ``get_smoke(arch_id)`` a reduced
+config of the same structural family for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.core.arch import ArchConfig
+
+ARCH_IDS: List[str] = [
+    "internlm2_1_8b",
+    "granite_3_8b",
+    "gemma3_4b",
+    "llama3_2_3b",
+    "seamless_m4t_large_v2",
+    "dbrx_132b",
+    "phi3_5_moe_42b",
+    "zamba2_2_7b",
+    "falcon_mamba_7b",
+    "qwen2_vl_72b",
+]
+
+# canonical dashed ids (CLI --arch) -> module names
+ALIASES: Dict[str, str] = {
+    "internlm2-1.8b": "internlm2_1_8b",
+    "granite-3-8b": "granite_3_8b",
+    "gemma3-4b": "gemma3_4b",
+    "llama3.2-3b": "llama3_2_3b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "dbrx-132b": "dbrx_132b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+}
+
+
+def _module(arch_id: str):
+    mod_name = ALIASES.get(arch_id, arch_id.replace("-", "_").replace(".", "_"))
+    return importlib.import_module(f"repro.configs.{mod_name}")
+
+
+def get(arch_id: str) -> ArchConfig:
+    return _module(arch_id).FULL
+
+
+def get_smoke(arch_id: str) -> ArchConfig:
+    return _module(arch_id).SMOKE
+
+
+def all_archs() -> List[str]:
+    return list(ARCH_IDS)

@@ -1,0 +1,131 @@
+"""The Impulse (paper C1): DSP block + learn block as one trainable,
+quantizable, deployable unit — the end-to-end object every other
+platform stage (tuner, estimator, compiler, calibration) consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocks import DSPBlock, LearnBlock
+from repro.core import quantize as qz
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class Impulse:
+    dsp: DSPBlock
+    learn: LearnBlock
+    input_shape: Any                     # samples (audio) or (H, W, C)
+    params: Optional[Any] = None
+    qparams: Optional[qz.QuantizedParams] = None
+
+    # ------------------------------------------------------------------
+    def init(self, key) -> "Impulse":
+        feat_shape = self.dsp.feature_shape(self.input_shape)
+        self.params = self.learn.init(key, feat_shape)
+        return self
+
+    def features(self, raw: jax.Array) -> jax.Array:
+        return self.dsp.apply(raw)
+
+    def logits(self, raw: jax.Array, params=None) -> jax.Array:
+        feats = self.features(raw)
+        return self.learn.apply(params if params is not None else self.params,
+                                feats)
+
+    def logits_int8(self, raw: jax.Array) -> jax.Array:
+        """Quantized inference path (paper C5): DSP stays float, the NN
+        runs int8 — matching the platform's deployment split."""
+        assert self.qparams is not None, "run quantize() first"
+        feats = self.features(raw)
+        fq = qz.fake_quant_params(self.qparams)
+        return self.learn.apply(fq, feats)
+
+    # ------------------------------------------------------------------
+    def loss_fn(self, params, raw, labels):
+        logits = self.learn.apply(params, self.features(raw))
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+        acc = (logits.argmax(-1) == labels).mean()
+        return nll, {"loss": nll, "acc": acc}
+
+    def fit(self, train_data, *, epochs: int = 5, batch_size: int = 32,
+            lr: float = 1e-3, key=None, eval_data=None,
+            log_every: int = 0) -> Dict[str, Any]:
+        """Minimal in-memory training loop for platform-scale (KWS-size)
+        models; pod-scale training goes through train/trainer.py."""
+        key = key if key is not None else jax.random.key(0)
+        if self.params is None:
+            self.init(key)
+        xs, ys = train_data
+        n = xs.shape[0]
+        opt_cfg = AdamWConfig(lr=lr, weight_decay=0.0, grad_clip=1.0)
+        opt_state = adamw_init(self.params)
+
+        @jax.jit
+        def step(params, opt_state, bx, by):
+            (loss, metrics), grads = jax.value_and_grad(
+                self.loss_fn, has_aux=True)(params, bx, by)
+            params, opt_state, om = adamw_update(grads, opt_state, params,
+                                                 opt_cfg)
+            return params, opt_state, {**metrics, **om}
+
+        history = []
+        params = self.params
+        rng = np.random.RandomState(0)
+        for ep in range(epochs):
+            order = rng.permutation(n)
+            ep_loss, ep_acc, nb = 0.0, 0.0, 0
+            for i in range(0, n - batch_size + 1, batch_size):
+                idx = order[i:i + batch_size]
+                params, opt_state, m = step(params, opt_state, xs[idx],
+                                            ys[idx])
+                ep_loss += float(m["loss"])
+                ep_acc += float(m["acc"])
+                nb += 1
+            rec = {"epoch": ep, "loss": ep_loss / max(nb, 1),
+                   "acc": ep_acc / max(nb, 1)}
+            if eval_data is not None:
+                rec["val_acc"] = float(self.evaluate(params, *eval_data))
+            history.append(rec)
+            if log_every and ep % log_every == 0:
+                print(rec)
+        self.params = params
+        return {"history": history, "final": history[-1] if history else {}}
+
+    def evaluate(self, params, xs, ys, batch_size: int = 64) -> float:
+        correct, total = 0, 0
+        for i in range(0, xs.shape[0], batch_size):
+            logits = self.learn.apply(params, self.features(
+                xs[i:i + batch_size]))
+            correct += int((logits.argmax(-1) == ys[i:i + batch_size]).sum())
+            total += int(logits.shape[0] - 0)
+        return correct / max(total, 1)
+
+    def confusion_matrix(self, xs, ys, n_classes: int) -> np.ndarray:
+        preds = np.asarray(self.logits(xs).argmax(-1))
+        cm = np.zeros((n_classes, n_classes), np.int64)
+        for t, p in zip(np.asarray(ys), preds):
+            cm[t, p] += 1
+        return cm
+
+    # ------------------------------------------------------------------
+    def quantize(self, calib_raw: jax.Array) -> "Impulse":
+        """Post-training int8 quantization calibrated on sample data."""
+        feats = self.features(calib_raw)
+        self.qparams = qz.quantize_params(
+            self.params, calib_fn=lambda p: self.learn.apply(p, feats))
+        return self
+
+    def int8_accuracy(self, xs, ys, batch_size: int = 64) -> float:
+        correct = 0
+        for i in range(0, xs.shape[0], batch_size):
+            logits = self.logits_int8(xs[i:i + batch_size])
+            correct += int((logits.argmax(-1) == ys[i:i + batch_size]).sum())
+        return correct / xs.shape[0]

@@ -1,0 +1,120 @@
+"""int8 quantization (paper C5): PTQ + QAT fake-quant, Jacob et al. 2017.
+
+Weights: per-output-channel symmetric int8 (the last axis is treated as
+the output-channel axis, matching this repo's (in, out) weight layout).
+Activations: per-tensor affine — calibrated ranges would come from
+representative data; ``quantize_params`` stores weight quant only (the
+paper's "full int8" NN path keeps DSP in float, same as we do).
+
+``fake_quant_params`` returns float params that went through the
+quantize→dequantize round trip: bit-faithful int8 numerics on any
+backend, and the serving path pairs with ``kernels/int8_matmul`` on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class QuantizedParams:
+    q: Any           # pytree of int8 arrays (or passthrough float leaves)
+    scales: Any      # matching pytree of f32 scales (None = not quantized)
+    meta: Dict[str, Any]
+
+
+def _quant_leaf(w: jax.Array):
+    """Per-output-channel symmetric int8 for >=2D float leaves."""
+    if w.ndim < 2 or not jnp.issubdtype(w.dtype, jnp.floating):
+        return w, None
+    axes = tuple(range(w.ndim - 1))
+    amax = jnp.max(jnp.abs(w), axis=axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant_leaf(q, scale):
+    if scale is None:
+        return q
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_params(params, calib_fn: Optional[Callable] = None
+                    ) -> QuantizedParams:
+    leaves, treedef = jax.tree.flatten(params)
+    qs, ss = [], []
+    n_q, total_bytes, q_bytes = 0, 0, 0
+    for leaf in leaves:
+        q, s = _quant_leaf(leaf)
+        qs.append(q)
+        ss.append(s)
+        total_bytes += leaf.size * leaf.dtype.itemsize
+        if s is not None:
+            n_q += 1
+            q_bytes += q.size + int(np.prod(s.shape)) * 4
+        else:
+            q_bytes += leaf.size * leaf.dtype.itemsize
+    meta = {"n_quantized": n_q, "float_bytes": total_bytes,
+            "int8_bytes": q_bytes,
+            "compression": total_bytes / max(q_bytes, 1)}
+    return QuantizedParams(jax.tree.unflatten(treedef, qs),
+                           jax.tree.unflatten(treedef, ss), meta)
+
+
+def fake_quant_params(qp: QuantizedParams):
+    return jax.tree.map(
+        lambda q, s: _dequant_leaf(q, s),
+        qp.q, qp.scales,
+        is_leaf=lambda x: x is None)
+
+
+def quantization_error(params, qp: QuantizedParams) -> float:
+    fq = fake_quant_params(qp)
+    errs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, fq)
+    return max(jax.tree.leaves(errs))
+
+
+# ---------------------------------------------------------------------------
+# QAT: straight-through-estimator fake quant for training
+# ---------------------------------------------------------------------------
+def fake_quant_ste(w: jax.Array) -> jax.Array:
+    """Quantize-dequantize with identity gradient (STE)."""
+    q, s = _quant_leaf(w)
+    if s is None:
+        return w
+    wq = _dequant_leaf(q, s)
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def qat_params(params):
+    """Apply STE fake quant to every quantizable leaf (wrap a loss with
+    this for quantization-aware training)."""
+    return jax.tree.map(fake_quant_ste, params)
+
+
+# ---------------------------------------------------------------------------
+# Activation quantization helpers (per-tensor affine)
+# ---------------------------------------------------------------------------
+def calibrate_activation(x: jax.Array) -> Dict[str, float]:
+    lo = float(jnp.min(x))
+    hi = float(jnp.max(x))
+    scale = max(hi - lo, 1e-8) / 255.0
+    zero_point = int(round(-lo / scale)) - 128
+    return {"scale": scale, "zero_point": zero_point}
+
+
+def quant_activation(x: jax.Array, c: Dict[str, float]) -> jax.Array:
+    q = jnp.round(x / c["scale"]) + c["zero_point"]
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def dequant_activation(q: jax.Array, c: Dict[str, float]) -> jax.Array:
+    return (q.astype(jnp.float32) - c["zero_point"]) * c["scale"]

@@ -1,0 +1,160 @@
+"""DSP preprocessing blocks (paper §4.2): the continuum of feature
+extractors the Impulse pipeline composes with model blocks.
+
+Each block is a pure callable with declared hyperparameters and a
+``feature_shape`` the tuner uses when sizing downstream model blocks.
+The heavy path (framing → window → DFT → mel) dispatches through
+``kernels/ops.mel_frontend`` (Pallas on TPU, jnp ref elsewhere).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dsp import filterbank as fb
+from repro.kernels import ops as kops
+
+
+def frame_signal(signal: jax.Array, frame_len: int, stride: int) -> jax.Array:
+    t = signal.shape[-1]
+    n_frames = 1 + (t - frame_len) // stride
+    idx = (np.arange(n_frames)[:, None] * stride
+           + np.arange(frame_len)[None, :])
+    return signal[..., idx]
+
+
+@dataclasses.dataclass(frozen=True)
+class MFEBlock:
+    """Mel-filterbank energies.  Hyperparameters mirror the paper's
+    Table 3 notation: MFE(frame_s, stride_s, n_mels)."""
+    sample_rate: int = 16_000
+    frame_s: float = 0.02
+    stride_s: float = 0.01
+    n_mels: int = 40
+    n_fft: int = 512
+    name: str = "mfe"
+
+    @property
+    def frame_len(self) -> int:
+        return int(self.sample_rate * self.frame_s)
+
+    @property
+    def stride(self) -> int:
+        return int(self.sample_rate * self.stride_s)
+
+    def feature_shape(self, n_samples: int) -> Tuple[int, int]:
+        n_frames = 1 + (n_samples - self.frame_len) // self.stride
+        return (n_frames, self.n_mels)
+
+    def _tables(self):
+        n_bins = self.n_fft // 2 + 1
+        window = jnp.asarray(np.hanning(self.frame_len), jnp.float32)
+        cos, sin = fb.dft_matrices(self.frame_len, self.n_fft)
+        mel = fb.mel_filterbank(n_bins, self.n_mels, self.sample_rate)
+        return window, jnp.asarray(cos), jnp.asarray(sin), jnp.asarray(mel)
+
+    def __call__(self, signal: jax.Array) -> jax.Array:
+        """(B, T) audio -> (B, n_frames, n_mels) log-mel."""
+        frames = frame_signal(signal, self.frame_len, self.stride)
+        window, cos, sin, mel = self._tables()
+        return kops.mel_frontend(frames, window, cos, sin, mel)
+
+    def hyperparams(self):
+        return {"frame_s": self.frame_s, "stride_s": self.stride_s,
+                "n_mels": self.n_mels}
+
+
+@dataclasses.dataclass(frozen=True)
+class MFCCBlock:
+    """MFCCs = DCT-II of the log-mel energies."""
+    sample_rate: int = 16_000
+    frame_s: float = 0.02
+    stride_s: float = 0.01
+    n_mels: int = 40
+    n_coeffs: int = 13
+    n_fft: int = 512
+    name: str = "mfcc"
+
+    @property
+    def _mfe(self) -> MFEBlock:
+        return MFEBlock(self.sample_rate, self.frame_s, self.stride_s,
+                        self.n_mels, self.n_fft)
+
+    def feature_shape(self, n_samples: int) -> Tuple[int, int]:
+        return (self._mfe.feature_shape(n_samples)[0], self.n_coeffs)
+
+    def __call__(self, signal: jax.Array) -> jax.Array:
+        logmel = self._mfe(signal)
+        dct = jnp.asarray(fb.dct_matrix(self.n_mels, self.n_coeffs))
+        return logmel @ dct
+
+    def hyperparams(self):
+        return {"frame_s": self.frame_s, "stride_s": self.stride_s,
+                "n_mels": self.n_mels, "n_coeffs": self.n_coeffs}
+
+
+@dataclasses.dataclass(frozen=True)
+class SpectrogramBlock:
+    sample_rate: int = 16_000
+    frame_s: float = 0.02
+    stride_s: float = 0.01
+    n_fft: int = 256
+    name: str = "spectrogram"
+
+    def feature_shape(self, n_samples: int) -> Tuple[int, int]:
+        frame_len = int(self.sample_rate * self.frame_s)
+        stride = int(self.sample_rate * self.stride_s)
+        return (1 + (n_samples - frame_len) // stride, self.n_fft // 2 + 1)
+
+    def __call__(self, signal: jax.Array) -> jax.Array:
+        frame_len = int(self.sample_rate * self.frame_s)
+        stride = int(self.sample_rate * self.stride_s)
+        frames = frame_signal(signal, frame_len, stride)
+        window = jnp.asarray(np.hanning(frame_len), jnp.float32)
+        cos, sin = fb.dft_matrices(frame_len, self.n_fft)
+        xw = frames.astype(jnp.float32) * window
+        re = xw @ jnp.asarray(cos)
+        im = xw @ jnp.asarray(sin)
+        return jnp.log(jnp.maximum(re * re + im * im, 1e-6))
+
+    def hyperparams(self):
+        return {"frame_s": self.frame_s, "stride_s": self.stride_s,
+                "n_fft": self.n_fft}
+
+
+@dataclasses.dataclass(frozen=True)
+class RawBlock:
+    """Pass-through (normalized raw signal) — the 'no DSP' end of the
+    paper's continuum."""
+    name: str = "raw"
+
+    def feature_shape(self, n_samples: int) -> Tuple[int]:
+        return (n_samples,)
+
+    def __call__(self, signal: jax.Array) -> jax.Array:
+        s = signal.astype(jnp.float32)
+        mu = s.mean(axis=-1, keepdims=True)
+        sd = s.std(axis=-1, keepdims=True) + 1e-6
+        return (s - mu) / sd
+
+    def hyperparams(self):
+        return {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ImageNormBlock:
+    """Image scaling block for the VWW / image-classification pipelines."""
+    name: str = "image_norm"
+
+    def feature_shape(self, hwc: Tuple[int, int, int]):
+        return hwc
+
+    def __call__(self, images: jax.Array) -> jax.Array:
+        return images.astype(jnp.float32) / 127.5 - 1.0
+
+    def hyperparams(self):
+        return {}

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: mel frontend (window → DFT-as-matmul → power → mel).
+
+Hardware adaptation of the paper's DSP stage (§4.2): on a Cortex-M the
+MFE runs as a radix-2 FFT in CMSIS-DSP; a butterfly FFT is hostile to a
+128×128 systolic array, but the (frames × DFT-matrix) product is exactly
+an MXU matmul.  For KWS frame lengths (L ≤ 1024) the dense DFT is
+compute-competitive and keeps the whole frontend in one fused kernel:
+frames tile in VMEM, two matmuls (cos/sin), square-add, mel matmul, log.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(frames_ref, window_ref, cos_ref, sin_ref, mel_ref, o_ref, *,
+            log_floor: float):
+    xw = frames_ref[...].astype(jnp.float32) * window_ref[...][None, :]
+    re = jax.lax.dot(xw, cos_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    im = jax.lax.dot(xw, sin_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    power = re * re + im * im
+    mel = jax.lax.dot(power, mel_ref[...].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.log(jnp.maximum(mel, log_floor))
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "log_floor",
+                                             "interpret"))
+def mel_frontend(frames: jax.Array, window: jax.Array, dft_cos: jax.Array,
+                 dft_sin: jax.Array, mel_fb: jax.Array, *,
+                 block_f: int = 128, log_floor: float = 1e-6,
+                 interpret: bool = False) -> jax.Array:
+    """frames: (F, L); window: (L,); dft_cos/sin: (L, nbins);
+    mel_fb: (nbins, n_mels).  Returns log-mel (F, n_mels) f32.
+
+    Batch dims fold into F upstream (ops.py)."""
+    f, l = frames.shape
+    nbins = dft_cos.shape[1]
+    n_mels = mel_fb.shape[1]
+    block_f = min(block_f, f)
+    assert f % block_f == 0, (f, block_f)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, log_floor=log_floor),
+        grid=(f // block_f,),
+        in_specs=[
+            pl.BlockSpec((block_f, l), lambda i: (i, 0)),
+            pl.BlockSpec((l,), lambda i: (0,)),
+            pl.BlockSpec((l, nbins), lambda i: (0, 0)),
+            pl.BlockSpec((l, nbins), lambda i: (0, 0)),
+            pl.BlockSpec((nbins, n_mels), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_f, n_mels), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((f, n_mels), jnp.float32),
+        interpret=interpret,
+    )(frames, window, dft_cos, dft_sin, mel_fb)

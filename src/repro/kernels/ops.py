@@ -1,0 +1,81 @@
+"""jit'd dispatch wrappers: Pallas kernel on TPU, jnp ref on CPU.
+
+The model layers call these; on the CPU container every graph lowers via
+the ref path (so dry-runs/pjit work), while on a real TPU backend the
+Pallas kernels take over.  ``force`` pins a path for tests/benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import int8_matmul as im
+from repro.kernels import mamba_scan as ms
+from repro.kernels import mel_frontend as mf
+from repro.kernels import ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def int8_matmul(x_q, w_q, x_scale, w_scale, *, force: Optional[str] = None):
+    path = force or ("pallas" if _on_tpu() else "ref")
+    if path == "pallas":
+        return im.int8_matmul(x_q, w_q, x_scale, w_scale)
+    if path == "interpret":
+        return im.int8_matmul(x_q, w_q, x_scale, w_scale, interpret=True)
+    return ref.int8_matmul_ref(x_q, w_q, x_scale, w_scale)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    force: Optional[str] = None):
+    """q/k/v: (B, S, H, D) — GQA expansion done here; kernel takes (BH,S,D)."""
+    path = force or ("pallas" if _on_tpu() else "ref")
+    if path == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    b, s, h, d = q.shape
+    if k.shape[2] != h:
+        k = jnp.repeat(k, h // k.shape[2], axis=2)
+        v = jnp.repeat(v, h // v.shape[2], axis=2)
+
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+
+    out = fa.flash_attention(fold(q), fold(k), fold(v), causal=causal,
+                             window=window,
+                             interpret=(path == "interpret"))
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+def mamba_scan(x, dt, b_mat, c_mat, a, *, force: Optional[str] = None
+               ) -> Tuple[jax.Array, jax.Array]:
+    path = force or ("pallas" if _on_tpu() else "ref")
+    if path == "pallas":
+        return ms.mamba_scan(x, dt, b_mat, c_mat, a)
+    if path == "interpret":
+        return ms.mamba_scan(x, dt, b_mat, c_mat, a, interpret=True)
+    return ref.mamba_scan_ref(x, dt, b_mat, c_mat, a)
+
+
+def mel_frontend(frames, window, dft_cos, dft_sin, mel_fb, *,
+                 force: Optional[str] = None):
+    """frames: (..., F, L) — leading dims folded into the grid."""
+    path = force or ("pallas" if _on_tpu() else "ref")
+    if path == "ref":
+        return ref.mel_frontend_ref(frames, window, dft_cos, dft_sin, mel_fb)
+    lead = frames.shape[:-2]
+    f, l = frames.shape[-2:]
+    flat = frames.reshape((-1, l)) if lead else frames
+    # fold leading dims into the frame dim
+    flat = frames.reshape((-1, l))
+    out = mf.mel_frontend(flat, window, dft_cos, dft_sin, mel_fb,
+                          interpret=(path == "interpret"))
+    return out.reshape(*lead, f, mel_fb.shape[1]) if lead else out

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each function is the mathematical definition the kernel must reproduce;
+tests sweep shapes/dtypes and assert allclose(kernel(interpret=True), ref).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul with per-channel dequant (paper C5: full int8 inference)
+# ---------------------------------------------------------------------------
+def int8_matmul_ref(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
+                    w_scale: jax.Array) -> jax.Array:
+    """x_q: (M, K) int8; w_q: (K, N) int8; x_scale: (M,) or () f32;
+    w_scale: (N,) f32 per-output-channel.  Returns f32 (M, N)."""
+    acc = jnp.matmul(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    scale = jnp.atleast_1d(x_scale)[:, None] * w_scale[None, :]
+    return acc.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# flash attention (causal, optional sliding window)
+# ---------------------------------------------------------------------------
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q/k/v: (B, S, H, D) same head count (GQA expansion happens outside).
+    f32 math, output in q.dtype."""
+    b, s, h, d = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask = kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked selective scan (mamba1-style diagonal SSM)
+# ---------------------------------------------------------------------------
+def mamba_scan_ref(x: jax.Array, dt: jax.Array, b_mat: jax.Array,
+                   c_mat: jax.Array, a: jax.Array,
+                   h0: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """x/dt: (B, S, D); b_mat/c_mat: (B, S, N); a: (D, N) negative.
+
+    h[t] = exp(dt[t] ⊙ a) * h[t-1] + (dt[t]*x[t]) ⊗ b[t];  y[t] = h[t]·c[t]
+    Returns (y (B, S, D) f32, h_final (B, D, N) f32)."""
+    bsz, s, d = x.shape
+    n = b_mat.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b_mat.astype(jnp.float32)
+    cf = c_mat.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    h = jnp.zeros((bsz, d, n), jnp.float32) if h0 is None else h0
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs
+        decay = jnp.exp(dtt[:, :, None] * af)
+        h = decay * h + (dtt * xt)[:, :, None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    h_final, ys = jax.lax.scan(
+        step, h, (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+                  jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), h_final
+
+
+# ---------------------------------------------------------------------------
+# mel frontend (framing → window → DFT-as-matmul → power → mel → log)
+# ---------------------------------------------------------------------------
+def frame_signal(signal: jax.Array, frame_len: int, stride: int) -> jax.Array:
+    """(B, T) -> (B, n_frames, frame_len)."""
+    t = signal.shape[-1]
+    n_frames = 1 + (t - frame_len) // stride
+    idx = (np.arange(n_frames)[:, None] * stride
+           + np.arange(frame_len)[None, :])
+    return signal[..., idx]
+
+
+def mel_frontend_ref(frames: jax.Array, window: jax.Array,
+                     dft_cos: jax.Array, dft_sin: jax.Array,
+                     mel_fb: jax.Array, log_floor: float = 1e-6
+                     ) -> jax.Array:
+    """frames: (B, F, L); window: (L,); dft_cos/sin: (L, nbins);
+    mel_fb: (nbins, n_mels).  Returns log-mel (B, F, n_mels) f32.
+
+    The DFT is two dense matmuls (MXU-native, vs butterfly FFT)."""
+    xw = frames.astype(jnp.float32) * window.astype(jnp.float32)
+    re = xw @ dft_cos.astype(jnp.float32)
+    im = xw @ dft_sin.astype(jnp.float32)
+    power = re * re + im * im
+    mel = power @ mel_fb.astype(jnp.float32)
+    return jnp.log(jnp.maximum(mel, log_floor))

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never
+touches jax device state (device count is locked on first backend init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods).
+
+    Axes: "pod" (DP-outer, crosses DCN), "data" (DP/FSDP, intra-pod ICI),
+    "model" (TP/EP/SP, innermost — fastest ICI neighbours).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist (tests/examples on CPU): 1-device mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def mesh_name(mesh) -> str:
+    return "x".join(str(mesh.shape[a]) for a in mesh.axis_names)

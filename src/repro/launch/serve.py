@@ -1,0 +1,43 @@
+"""Serving driver: ``python -m repro.launch.serve --arch <id>``.
+
+Runs the batch server over synthetic prompts on the selected arch
+(smoke config on CPU; same code takes the full config on a pod).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models.params import init_params
+from repro.serve.server import BatchServer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch) if args.full else configs.get_smoke(args.arch)
+    params = init_params(cfg, jax.random.key(0))
+    server = BatchServer(cfg, params, batch_size=args.batch,
+                         prompt_len=args.prompt_len,
+                         max_new_tokens=args.max_new)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=args.prompt_len)
+               .astype(np.int32) for _ in range(args.requests)]
+    server.submit(prompts)
+    metrics = server.run()
+    print(json.dumps(metrics, indent=1))
+
+
+if __name__ == "__main__":
+    main()

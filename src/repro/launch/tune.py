@@ -1,0 +1,43 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# MUST precede all other imports (jax locks device count on first init).
+
+# Pod-config tuner driver: the EON Tuner loop over distribution knobs.
+#   python -m repro.launch.tune --arch dbrx-132b --shape train_4k --n 6
+import argparse
+import json
+from pathlib import Path
+
+from repro.core.tuner import PodConfigTuner
+from repro.launch.dryrun import run_cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--n", type=int, default=6)
+    ap.add_argument("--out", default="experiments/tuner")
+    args = ap.parse_args()
+
+    tuner = PodConfigTuner(run_cell, arch=args.arch, shape=args.shape,
+                           multi_pod=args.mesh == "multi")
+    ranked = tuner.search(n_samples=args.n)
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    rows = []
+    for c in ranked:
+        r = c.report["roofline"]
+        rows.append({"strategy": c.strategy, "n_micro": c.report["n_micro"],
+                     "remat": c.remat,
+                     "roofline_fraction": r["roofline_fraction"],
+                     "bottleneck": r["bottleneck"],
+                     "hbm_gib": c.report["memory"]["per_device_hbm_gib"]})
+        print(rows[-1])
+    (out / f"{args.arch}_{args.shape}_{args.mesh}.json").write_text(
+        json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

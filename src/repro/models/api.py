@@ -1,0 +1,133 @@
+"""Unified model API: family dispatch + input specs for every shape cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation) — the
+dry-run consumes these directly.  Modality frontends are STUBS: audio/vlm
+archs receive precomputed frame/patch embeddings here.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.arch import ArchConfig, ShapeConfig
+from repro.models import encdec, transformer
+from repro.models.params import abstract_params
+
+
+class ModelFns(NamedTuple):
+    forward_train: Callable
+    forward_prefill: Callable
+    forward_decode: Callable
+
+
+def model_fns(cfg: ArchConfig) -> ModelFns:
+    if cfg.is_encdec:
+        return ModelFns(encdec.forward_train, encdec.forward_prefill,
+                        encdec.forward_decode)
+    return ModelFns(transformer.forward_train, transformer.forward_prefill,
+                    transformer.forward_decode)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs) per shape kind
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {"labels": _sds((b, s), jnp.int32)}
+    if cfg.is_encdec:
+        specs["enc_embeddings"] = _sds(
+            (b, s // cfg.enc_seq_divisor, cfg.d_model), cfg.dtype)
+        specs["tokens"] = _sds((b, s), jnp.int32)
+    elif cfg.frontend:  # vlm/audio decoder-only: precomputed embeddings
+        specs["embeddings"] = _sds((b, s, cfg.d_model), cfg.dtype)
+        if cfg.rope_variant == "mrope":
+            specs["positions"] = _sds((b, s, 3), jnp.int32)
+    else:
+        specs["tokens"] = _sds((b, s), jnp.int32)
+    return specs
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    specs = train_input_specs(cfg, shape)
+    specs.pop("labels")
+    return specs
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Decode = one new token against a cache of seq_len.  Returns
+    {"cache": <abstract cache pytree>, "token": (B,), "position": (B,)}."""
+    b = shape.global_batch
+    cache = abstract_cache(cfg, shape)
+    return {"cache": cache,
+            "token": _sds((b,), jnp.int32),
+            "position": _sds((b,), jnp.int32)}
+
+
+def abstract_cache(cfg: ArchConfig, shape: ShapeConfig):
+    """Cache ShapeDtypeStructs via eval_shape over the prefill path."""
+    params = abstract_params(cfg)
+    pre_specs = prefill_input_specs(cfg, shape)
+    fns = model_fns(cfg)
+
+    def prefill(p, inputs):
+        return fns.forward_prefill(cfg, p, inputs)
+
+    _, cache = jax.eval_shape(prefill, params, pre_specs)
+    return cache
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    if shape.kind == "decode":
+        return decode_input_specs(cfg, shape)
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Concrete synthetic inputs (smoke tests / examples) — same shapes as specs
+# ---------------------------------------------------------------------------
+def synthetic_inputs(cfg: ArchConfig, shape: ShapeConfig, key: jax.Array):
+    specs = (train_input_specs(cfg, shape) if shape.is_train
+             else prefill_input_specs(cfg, shape))
+    out = {}
+    for name, sds in specs.items():
+        key, sub = jax.random.split(key)
+        if name in ("tokens", "labels"):
+            out[name] = jax.random.randint(sub, sds.shape, 0,
+                                           cfg.vocab_size, jnp.int32)
+        elif name == "positions":
+            pos = jnp.broadcast_to(
+                jnp.arange(sds.shape[1], dtype=jnp.int32)[None, :, None],
+                sds.shape)
+            out[name] = pos
+        else:
+            out[name] = jax.random.normal(sub, sds.shape, jnp.float32) \
+                .astype(sds.dtype) * 0.1
+    return out
+
+
+# Logical-axis annotations for inputs, consumed by the dryrun/sharding layer.
+def input_logical_axes(cfg: ArchConfig, shape: ShapeConfig):
+    if shape.kind == "decode":
+        return None  # handled via cache sharding rules in launch/dryrun.py
+    axes = {}
+    names = (train_input_specs(cfg, shape) if shape.is_train
+             else prefill_input_specs(cfg, shape)).keys()
+    for name in names:
+        if name in ("tokens", "labels"):
+            axes[name] = ("act_batch", "act_seq")
+        elif name == "positions":
+            axes[name] = ("act_batch", "act_seq", None)
+        elif name in ("embeddings", "enc_embeddings"):
+            axes[name] = ("act_batch", "act_seq", "act_dmodel")
+    return axes

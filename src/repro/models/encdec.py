@@ -1,0 +1,147 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+The audio frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, S_enc, d).  The transformer
+backbone is real: a bidirectional encoder and a causal decoder with
+cross-attention, both scanned over stacked layer params.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.arch import ArchConfig
+from repro.models.layers import (attention_decode_layer, attention_layer,
+                                 rms_norm, swiglu_mlp)
+from repro.models.transformer import (_maybe_remat, default_positions,
+                                      embed_tokens, lm_loss,
+                                      maybe_cast_params, unembed)
+from repro.sharding.policy import constrain
+
+
+def _attn_kwargs(cfg: ArchConfig):
+    return dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_variant=cfg.rope_variant,
+                rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections)
+
+
+def encode(cfg: ArchConfig, params, enc_embeddings: jax.Array, *,
+           remat: str = "none") -> jax.Array:
+    """Bidirectional encoder over frame embeddings (B, S_enc, d)."""
+    x = enc_embeddings.astype(cfg.activation_dtype)
+    x = constrain(x, ("act_batch", "act_res_seq", "act_dmodel"))
+    b, s = x.shape[:2]
+    positions = default_positions(cfg, b, s)
+
+    def body(h, p):
+        hh = rms_norm(p["attn_norm"], h, cfg.norm_eps)
+        attn_out, _ = attention_layer(p["attn"], hh, positions,
+                                      causal=False, **_attn_kwargs(cfg))
+        h = h + attn_out
+        hh = rms_norm(p["mlp_norm"], h, cfg.norm_eps)
+        h = h + swiglu_mlp(p["mlp"], hh)
+        return constrain(h, ("act_batch", "act_res_seq", "act_dmodel")), None
+
+    x, _ = lax.scan(_maybe_remat(body, remat), x, params["enc_blocks"])
+    return rms_norm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+def _decoder_body(cfg: ArchConfig, enc_out, enc_positions, positions,
+                  collect_kv: bool):
+    def body(h, p):
+        hh = rms_norm(p["attn_norm"], h, cfg.norm_eps)
+        attn_out, kv = attention_layer(p["attn"], hh, positions,
+                                       **_attn_kwargs(cfg))
+        h = h + attn_out
+        # cross attention: K/V from encoder output, no rope on keys
+        hh = rms_norm(p["xattn_norm"], h, cfg.norm_eps)
+        xk = (enc_out @ p["xattn"]["wk"].astype(enc_out.dtype)).reshape(
+            *enc_out.shape[:2], cfg.n_kv_heads, cfg.resolved_head_dim)
+        xv = (enc_out @ p["xattn"]["wv"].astype(enc_out.dtype)).reshape(
+            *enc_out.shape[:2], cfg.n_kv_heads, cfg.resolved_head_dim)
+        kw = dict(_attn_kwargs(cfg))
+        kw["rope_variant"] = "none"
+        x_out, _ = attention_layer(p["xattn"], hh, positions, causal=False,
+                                   kv_override=(xk, xv),
+                                   kv_positions=enc_positions, **kw)
+        h = h + x_out
+        hh = rms_norm(p["mlp_norm"], h, cfg.norm_eps)
+        h = h + swiglu_mlp(p["mlp"], hh)
+        h = constrain(h, ("act_batch", "act_res_seq", "act_dmodel"))
+        return h, (kv, (xk, xv)) if collect_kv else None
+    return body
+
+
+def forward_train(cfg: ArchConfig, params, inputs: Dict[str, jax.Array], *,
+                  remat: str = "full"):
+    """inputs: enc_embeddings (B, S_enc, d), tokens (B, S), labels (B, S)."""
+    params = maybe_cast_params(params, cfg)
+    enc_out = encode(cfg, params, inputs["enc_embeddings"], remat=remat)
+    tokens = inputs["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    positions = default_positions(cfg, b, s)
+    enc_positions = default_positions(cfg, b, enc_out.shape[1])
+    body = _decoder_body(cfg, enc_out, enc_positions, positions, False)
+    x, _ = lax.scan(_maybe_remat(body, remat), x, params["blocks"])
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    return lm_loss(logits, inputs["labels"], cfg.vocab_size)
+
+
+def forward_prefill(cfg: ArchConfig, params, inputs: Dict[str, jax.Array]):
+    """Prefill the decoder self-attn cache + precompute cross-attn KV."""
+    params = maybe_cast_params(params, cfg)
+    enc_out = encode(cfg, params, inputs["enc_embeddings"])
+    tokens = inputs["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    positions = default_positions(cfg, b, s)
+    enc_positions = default_positions(cfg, b, enc_out.shape[1])
+    body = _decoder_body(cfg, enc_out, enc_positions, positions, True)
+    x, kvs = lax.scan(body, x, params["blocks"])
+    (k, v), (xk, xv) = kvs
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params, x[:, -1:, :], cfg)[:, 0]
+    from repro.models.transformer import _constrain_kv_cache
+    cache = {"k": _constrain_kv_cache(k), "v": _constrain_kv_cache(v),
+             "xk": _constrain_kv_cache(xk), "xv": _constrain_kv_cache(xv),
+             "full_pos": positions,
+             "enc_pos": enc_positions}
+    return logits, cache
+
+
+def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
+                   position: jax.Array):
+    params = maybe_cast_params(params, cfg)
+    x = embed_tokens(params, token[:, None], cfg)
+
+    def body(h, pc):
+        p, ck, cv, xk, xv = pc
+        hh = rms_norm(p["attn_norm"], h, cfg.norm_eps)
+        attn_out, ck, cv, _ = attention_decode_layer(
+            p["attn"], hh, position, ck, cv, cache["full_pos"], position,
+            **_attn_kwargs(cfg))
+        h = h + attn_out
+        hh = rms_norm(p["xattn_norm"], h, cfg.norm_eps)
+        x_out, _, _, _ = attention_decode_layer(
+            p["xattn"], hh, position, xk, xv, cache["enc_pos"], position,
+            cross=True, **_attn_kwargs(cfg))
+        h = h + x_out
+        hh = rms_norm(p["mlp_norm"], h, cfg.norm_eps)
+        h = h + swiglu_mlp(p["mlp"], hh)
+        return h, (ck, cv)
+
+    x, (ks, vs) = lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params, x, cfg)[:, 0]
+    new_cache = dict(cache, k=ks, v=vs)
+    new_cache["full_pos"] = jax.vmap(
+        lambda cp, pv, i: lax.dynamic_update_slice_in_dim(cp, pv[None], i, 0)
+    )(cache["full_pos"], position, position)
+    return logits, new_cache

@@ -1,0 +1,251 @@
+"""The paper's evaluation models (§5.1, MLPerf Tiny tasks), in pure JAX:
+
+* DS-CNN  — depthwise-separable CNN for keyword spotting (Sørensen 2020),
+* MobileNetV1-0.25 — visual wake words binary classifier,
+* CIFAR CNN — small convnet for image classification,
+* conv1d stacks — the EON-Tuner search family from Table 3
+  ("Nx conv1d (a to b)": N conv1d blocks widening a→b).
+
+Plain param-dict style matching the rest of the framework; convs via
+``lax.conv_general_dilated`` (NHWC).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+def conv2d(x, w, stride=1, groups=1, padding="SAME"):
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def conv1d(x, w, stride=1, padding="SAME"):
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride,), padding=padding,
+        dimension_numbers=("NWC", "WIO", "NWC"))
+
+
+def batchnorm_apply(p, x):
+    # inference-style: folded scale/offset (trained via simple moving stats)
+    return x * p["scale"] + p["offset"]
+
+
+def _conv_init(key, shape):
+    fan_in = math.prod(shape[:-1])
+    return jax.random.normal(key, shape, jnp.float32) * (2.0 / fan_in) ** 0.5
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,), jnp.float32),
+            "offset": jnp.zeros((c,), jnp.float32)}
+
+
+def _dense_init(key, din, dout):
+    return {"w": jax.random.normal(key, (din, dout), jnp.float32)
+            * (1.0 / din) ** 0.5,
+            "b": jnp.zeros((dout,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# DS-CNN (KWS)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DSCNNConfig:
+    n_classes: int = 12
+    n_filters: int = 64
+    n_blocks: int = 4
+    name: str = "ds-cnn"
+
+
+def dscnn_init(cfg: DSCNNConfig, key, input_shape: Tuple[int, int]):
+    keys = jax.random.split(key, 2 + 2 * cfg.n_blocks)
+    f = cfg.n_filters
+    params: Dict = {
+        "stem": {"w": _conv_init(keys[0], (10, 4, 1, f)), "bn": _bn_init(f)},
+        "blocks": [],
+        "head": _dense_init(keys[1], f, cfg.n_classes),
+    }
+    for i in range(cfg.n_blocks):
+        params["blocks"].append({
+            "dw": {"w": _conv_init(keys[2 + 2 * i], (3, 3, 1, f)),
+                   "bn": _bn_init(f)},
+            "pw": {"w": _conv_init(keys[3 + 2 * i], (1, 1, f, f)),
+                   "bn": _bn_init(f)},
+        })
+    return params
+
+
+def dscnn_apply(cfg: DSCNNConfig, params, feats: jax.Array) -> jax.Array:
+    """feats: (B, n_frames, n_mels) -> logits (B, n_classes)."""
+    x = feats[..., None]                                   # NHWC
+    x = conv2d(x, params["stem"]["w"], stride=2)
+    x = jax.nn.relu(batchnorm_apply(params["stem"]["bn"], x))
+    for blk in params["blocks"]:
+        c = x.shape[-1]
+        x = conv2d(x, blk["dw"]["w"], groups=c)
+        x = jax.nn.relu(batchnorm_apply(blk["dw"]["bn"], x))
+        x = conv2d(x, blk["pw"]["w"])
+        x = jax.nn.relu(batchnorm_apply(blk["pw"]["bn"], x))
+    x = x.mean(axis=(1, 2))                                # global avg pool
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV1 (VWW)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MobileNetV1Config:
+    n_classes: int = 2
+    width_mult: float = 0.25
+    name: str = "mobilenetv1"
+
+
+_MBV1_PLAN = [  # (out_channels@1.0, stride)
+    (64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2),
+    (512, 1), (512, 1), (512, 1), (512, 1), (512, 1), (1024, 2), (1024, 1),
+]
+
+
+def mobilenetv1_init(cfg: MobileNetV1Config, key,
+                     input_shape: Tuple[int, int, int] = (96, 96, 3)):
+    wm = cfg.width_mult
+    c_in = max(int(32 * wm), 8)
+    keys = jax.random.split(key, 2 + 2 * len(_MBV1_PLAN))
+    params: Dict = {
+        "stem": {"w": _conv_init(keys[0], (3, 3, input_shape[2], c_in)),
+                 "bn": _bn_init(c_in)},
+        "blocks": [],
+    }
+    c = c_in
+    for i, (c_out_base, stride) in enumerate(_MBV1_PLAN):
+        c_out = max(int(c_out_base * wm), 8)
+        params["blocks"].append({
+            "dw": {"w": _conv_init(keys[1 + 2 * i], (3, 3, 1, c)),
+                   "bn": _bn_init(c)},
+            "pw": {"w": _conv_init(keys[2 + 2 * i], (1, 1, c, c_out)),
+                   "bn": _bn_init(c_out)},
+        })
+        c = c_out
+    params["head"] = _dense_init(keys[-1], c, cfg.n_classes)
+    return params
+
+
+def mobilenetv1_apply(cfg: MobileNetV1Config, params, images) -> jax.Array:
+    x = conv2d(images, params["stem"]["w"], stride=2)
+    x = jax.nn.relu(batchnorm_apply(params["stem"]["bn"], x))
+    for blk, (_, stride) in zip(params["blocks"], _MBV1_PLAN):
+        cdim = x.shape[-1]
+        x = conv2d(x, blk["dw"]["w"], stride=stride, groups=cdim)
+        x = jax.nn.relu(batchnorm_apply(blk["dw"]["bn"], x))
+        x = conv2d(x, blk["pw"]["w"])
+        x = jax.nn.relu(batchnorm_apply(blk["pw"]["bn"], x))
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# CIFAR CNN (image classification)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CifarCNNConfig:
+    n_classes: int = 10
+    name: str = "cifar-cnn"
+
+
+def cifar_cnn_init(cfg: CifarCNNConfig, key,
+                   input_shape: Tuple[int, int, int] = (32, 32, 3)):
+    keys = jax.random.split(key, 4)
+    return {
+        "c1": {"w": _conv_init(keys[0], (3, 3, input_shape[2], 32)),
+               "bn": _bn_init(32)},
+        "c2": {"w": _conv_init(keys[1], (3, 3, 32, 64)), "bn": _bn_init(64)},
+        "c3": {"w": _conv_init(keys[2], (3, 3, 64, 64)), "bn": _bn_init(64)},
+        "head": _dense_init(keys[3], 64, cfg.n_classes),
+    }
+
+
+def cifar_cnn_apply(cfg: CifarCNNConfig, params, images) -> jax.Array:
+    x = images
+    for name in ("c1", "c2", "c3"):
+        x = conv2d(x, params[name]["w"])
+        x = jax.nn.relu(batchnorm_apply(params[name]["bn"], x))
+        x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# conv1d stacks — the EON-Tuner Table 3 model family
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Conv1DStackConfig:
+    """"Nx conv1d (a to b)": N blocks, channels geometric from a to b."""
+    n_classes: int = 12
+    n_blocks: int = 4
+    ch_first: int = 32
+    ch_last: int = 256
+    kernel: int = 3
+    name: str = "conv1d-stack"
+
+    @property
+    def channels(self) -> List[int]:
+        if self.n_blocks == 1:
+            return [self.ch_last]
+        r = (self.ch_last / self.ch_first) ** (1.0 / (self.n_blocks - 1))
+        return [int(round(self.ch_first * r ** i))
+                for i in range(self.n_blocks)]
+
+
+def conv1d_stack_init(cfg: Conv1DStackConfig, key,
+                      input_shape: Tuple[int, int]):
+    keys = jax.random.split(key, cfg.n_blocks + 1)
+    chans = cfg.channels
+    params: Dict = {"blocks": [], "head": None}
+    c = input_shape[1]
+    for i, c_out in enumerate(chans):
+        params["blocks"].append(
+            {"w": _conv_init(keys[i], (cfg.kernel, c, c_out)),
+             "bn": _bn_init(c_out)})
+        c = c_out
+    params["head"] = _dense_init(keys[-1], c, cfg.n_classes)
+    return params
+
+
+def conv1d_stack_apply(cfg: Conv1DStackConfig, params, feats) -> jax.Array:
+    """feats: (B, n_frames, n_feat) -> (B, n_classes)."""
+    x = feats
+    for blk in params["blocks"]:
+        x = conv1d(x, blk["w"])
+        x = jax.nn.relu(batchnorm_apply(blk["bn"], x))
+        x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 1), (1, 2, 1),
+                              "VALID")
+    x = x.mean(axis=1)
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def count_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+def model_macs_conv1d(cfg: Conv1DStackConfig, input_shape) -> int:
+    """Analytic MACs for the estimator (paper §4.4)."""
+    frames, feat = input_shape
+    macs, c, f = 0, feat, frames
+    for c_out in cfg.channels:
+        macs += f * cfg.kernel * c * c_out
+        f = max(f // 2, 1)
+        c = c_out
+    macs += c * cfg.n_classes
+    return macs

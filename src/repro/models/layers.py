@@ -1,0 +1,389 @@
+"""Foundational layers: norms, rotary embeddings, attention variants, MLP.
+
+All functions are pure: ``f(params, x, ...) -> y``.  Activation sharding is
+expressed through logical-axis constraints (``sharding.policy.constrain``)
+so the same model code runs unsharded on CPU and fully sharded on a pod.
+
+Attention comes in three structurally different lowerings (chosen
+statically per layer/shape so the HLO is honest about FLOPs and memory):
+
+* ``full_attention``     — plain O(S^2) scores; short sequences.
+* ``chunked_attention``  — ``lax.scan`` over KV chunks with online softmax
+                           (flash-attention schedule in jnp); long sequences.
+* ``local_attention``    — sliding-window via the two-chunk band trick;
+                           O(S * 2W) FLOPs, no scan carry.
+* ``decode_attention``   — one query step against a (possibly
+                           sequence-sharded) KV cache; flash-decoding style
+                           partial-softmax reductions are inserted by SPMD.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import flags
+from repro.sharding.policy import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(scale: jax.Array, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,), float32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Standard RoPE. x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (..., S, D/2)
+    angles = angles[..., None, :]                                # (..., S, 1, D/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): head_dim/2 frequencies split into
+    (temporal, height, width) sections, each rotated by its own position
+    stream.  positions: (..., S, 3)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                  # (D/2,)
+    assert sum(sections) == d // 2, (sections, d)
+    # Build per-frequency position selection: section i uses positions[..., i].
+    sec_ids = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                         total_repeat_length=d // 2)              # (D/2,)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(sec_ids, positions.shape[:-1] + (d // 2,)).astype(jnp.int32),
+        axis=-1)                                                  # (..., S, D/2)
+    angles = (pos * freqs)[..., None, :]                          # (..., S, 1, D/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def position_encode(q: jax.Array, k: jax.Array, positions: jax.Array,
+                    variant: str, theta: float,
+                    sections: Tuple[int, int, int]) -> Tuple[jax.Array, jax.Array]:
+    if variant == "mrope":
+        return (apply_mrope(q, positions, theta, sections),
+                apply_mrope(k, positions, theta, sections))
+    if variant == "rope":
+        return (apply_rope(q, positions, theta),
+                apply_rope(k, positions, theta))
+    if variant == "none":
+        return q, k
+    raise ValueError(f"unknown rope variant {variant!r}")
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+def _repeat_kv(kv: jax.Array, hq: int, axis: int = 2) -> jax.Array:
+    """Broadcast KV heads up to Hq.  A reshape of the *query* head dim
+    into (Hkv, group) would split a model-axis-sharded dimension into
+    factors GSPMD can only partially shard (measured: full-replication
+    bailouts → 16x attention flops); repeating the (replicated or
+    cleanly-sharded) KV heads keeps the einsum dims 1:1 with shardings.
+    """
+    hkv = kv.shape[axis]
+    if hkv == hq:
+        return kv
+    return jnp.repeat(kv, hq // hkv, axis=axis)
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B, Sq, Hq, D); k: (B, Sk, Hkv, D) -> (B, Hq, Sq, Sk)."""
+    k = _repeat_kv(k, q.shape[2])
+    return jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_combine(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p: (B, Hq, Sq, Sk); v: (B, Sk, Hkv, D) -> (B, Sq, Hq, D)."""
+    v = _repeat_kv(v, p.shape[1])
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(p.dtype))
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   q_positions: jax.Array, k_positions: jax.Array,
+                   window: int = 0, causal: bool = True) -> jax.Array:
+    """Plain attention with optional causal / sliding-window masking.
+
+    positions are (B, S) absolute indices (mask is position-based so the
+    same code serves packed/shifted sequences and cache decoding).
+    """
+    scale = q.shape[-1] ** -0.5
+    scores = _gqa_scores(q * scale, k)                       # (B,Hq,Sq,Sk) f32
+    mask = jnp.ones(scores.shape[-2:], dtype=bool)
+    qp = q_positions[:, None, :, None]
+    kp = k_positions[:, None, None, :]
+    if causal:
+        mask = kp <= qp
+    if window > 0:
+        mask = jnp.logical_and(mask, kp > qp - window)
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return _gqa_combine(p.astype(v.dtype), v)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_positions: jax.Array, k_positions: jax.Array,
+                      chunk: int = 1024, causal: bool = True) -> jax.Array:
+    """Online-softmax attention: ``lax.scan`` over KV chunks.
+
+    The flash-attention schedule expressed in jnp: memory is
+    O(Sq * chunk) instead of O(Sq * Sk); this is the ref/HLO twin of
+    ``kernels/flash_attention.py``.
+    """
+    b, sq, hq, d = q.shape
+    sk = k.shape[1]
+    assert sk % chunk == 0, (sk, chunk)
+    n_chunks = sk // chunk
+    scale = d ** -0.5
+    qs = (q * scale).astype(jnp.float32)
+
+    k_c = k.reshape(b, n_chunks, chunk, *k.shape[2:])
+    v_c = v.reshape(b, n_chunks, chunk, *v.shape[2:])
+    kp_c = k_positions.reshape(b, n_chunks, chunk)
+    # scan carries: (acc (B,Sq,Hq,D) f32, row max m, row sum l) per query.
+    acc0 = jnp.zeros((b, sq, hq, d), jnp.float32)
+    m0 = jnp.full((b, hq, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+
+    def body(carry, inputs):
+        acc, m, l = carry
+        kc, vc, kpc = inputs                                   # chunk leaves
+        s = _gqa_scores(qs, kc)                                # (B,Hq,Sq,C)
+        mask = jnp.ones(s.shape[-2:], dtype=bool)
+        qp = q_positions[:, None, :, None]
+        kp = kpc[:, None, None, :]
+        if causal:
+            mask = kp <= qp
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        if flags.get("bf16_attn_p"):
+            # flash-style: p consumed in bf16 by the MXU, f32 accumulate
+            pv = _gqa_combine(p.astype(v.dtype), vc).astype(jnp.float32)
+        else:
+            pv = _gqa_combine(p, vc.astype(jnp.float32))       # (B,Sq,Hq,D)
+        acc_new = acc * alpha.transpose(0, 2, 1)[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    (acc, m, l), _ = lax.scan(
+        body, (acc0, m0, l0),
+        (jnp.moveaxis(k_c, 1, 0), jnp.moveaxis(v_c, 1, 0),
+         jnp.moveaxis(kp_c, 1, 0)))
+    out = acc / jnp.maximum(l.transpose(0, 2, 1)[..., None], 1e-30)
+    return out.astype(v.dtype)
+
+
+def local_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_positions: jax.Array, k_positions: jax.Array,
+                    window: int) -> jax.Array:
+    """Sliding-window attention via the two-chunk band trick.
+
+    With chunk length C == window, query chunk i can only see key chunks
+    i-1 and i, so the banded score tensor is (B, H, nC, C, 2C):
+    O(S * 2W) FLOPs — honest sub-quadratic HLO for gemma3-style local
+    layers (vs masking a full S^2 tensor).
+    """
+    b, s, hq, d = q.shape
+    c = window
+    assert s % c == 0, (s, c)
+    n = s // c
+    scale = d ** -0.5
+    qc = (q * scale).reshape(b, n, c, hq, d)
+    kc = k.reshape(b, n, c, *k.shape[2:])
+    vc = v.reshape(b, n, c, *v.shape[2:])
+    # previous chunk (zeros for the first chunk — masked out by positions)
+    kprev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    kb = jnp.concatenate([kprev, kc], axis=2)                  # (B,n,2C,Hkv,D)
+    vb = jnp.concatenate([vprev, vc], axis=2)
+
+    qp = q_positions.reshape(b, n, c)
+    kp = k_positions.reshape(b, n, c)
+    kp_prev = jnp.concatenate(
+        [jnp.full_like(kp[:, :1], -(10 ** 9)), kp[:, :-1]], axis=1)
+    kpb = jnp.concatenate([kp_prev, kp], axis=2)               # (B,n,2C)
+
+    kb = _repeat_kv(kb, hq, axis=3)
+    vb = _repeat_kv(vb, hq, axis=3)
+    scores = jnp.einsum("bnqhd,bnkhd->bnhqk", qc, kb,
+                        preferred_element_type=jnp.float32)
+    mask = (kpb[:, :, None, None, :] <= qp[:, :, None, :, None])
+    mask &= (kpb[:, :, None, None, :] > qp[:, :, None, :, None] - window)
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bnhqk,bnkhd->bnqhd", p.astype(vb.dtype), vb)
+    return o.reshape(b, s, hq, d)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     q_position: jax.Array, cache_positions: jax.Array,
+                     window: int = 0) -> jax.Array:
+    """One-token decode against a KV cache.
+
+    q: (B, 1, Hq, D); caches: (B, Skv, Hkv, D); q_position: (B,);
+    cache_positions: (B, Skv) with -1 marking unwritten slots.  When the
+    cache's seq dim is sharded over mesh axes ("flash decoding"), SPMD
+    turns the max/sum reductions into the partial-softmax collectives.
+
+    Uses the grouped-q einsum (NOT _repeat_kv): materializing a repeated
+    KV cache costs G× the cache bytes (measured +8 GiB/device on
+    qwen2-72b decode).  Heads are replicated in decode rules so the
+    grouped reshape carries no sharding hazard here.
+    """
+    b, _, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    scale = d ** -0.5
+    qg = (q * scale).reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32)         # (B,Hkv,G,Skv)
+    valid = cache_positions >= 0
+    valid &= cache_positions <= q_position[:, None]
+    if window > 0:
+        valid &= cache_positions > (q_position[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, 1, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projections + rope + core dispatch)
+# ---------------------------------------------------------------------------
+def attention_layer(p: dict, x: jax.Array, positions: jax.Array, *,
+                    n_heads: int, n_kv_heads: int, head_dim: int,
+                    rope_variant: str, rope_theta: float, mrope_sections,
+                    window: int = 0, causal: bool = True,
+                    chunk_threshold: int = 8192,
+                    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    kv_positions: Optional[jax.Array] = None):
+    """Full attention layer on a whole sequence (train / prefill).
+
+    Returns (out, (k, v)) — the K/V tensors are returned so prefill can
+    populate the cache.  ``kv_override`` feeds cross-attention.
+    """
+    b, s, _ = x.shape
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, n_heads, head_dim)
+    if kv_override is None:
+        k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, n_kv_heads, head_dim)
+        v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, n_kv_heads, head_dim)
+        k_pos = positions if positions.ndim == 2 else positions[..., 0]
+        q, k = position_encode(q, k, positions, rope_variant, rope_theta,
+                               mrope_sections)
+    else:
+        k, v = kv_override
+        k_pos = kv_positions
+        if rope_variant != "none":
+            q = (apply_mrope(q, positions, rope_theta, mrope_sections)
+                 if rope_variant == "mrope"
+                 else apply_rope(q, positions, rope_theta))
+    q = constrain(q, ("act_batch", "act_seq", "act_heads", None))
+    k = constrain(k, ("act_batch", "act_kv_seq", "act_kv_heads", None))
+    v = constrain(v, ("act_batch", "act_kv_seq", "act_kv_heads", None))
+
+    q_pos1d = positions if positions.ndim == 2 else positions[..., 0]
+    if window > 0 and causal and s % window == 0 and s > window:
+        o = local_attention(q, k, v, q_pos1d, k_pos, window)
+    elif window > 0 and causal:
+        # irregular lengths (smoke shapes): windowed mask on full attention
+        o = full_attention(q, k, v, q_pos1d, k_pos, window=window)
+    elif k.shape[1] > chunk_threshold and causal:
+        o = chunked_attention(q, k, v, q_pos1d, k_pos)
+    else:
+        o = full_attention(q, k, v, q_pos1d, k_pos, causal=causal)
+    o = constrain(o, ("act_batch", "act_seq", "act_heads", None))
+    out = o.reshape(b, s, n_heads * head_dim) @ p["wo"].astype(x.dtype)
+    return out, (k, v)
+
+
+def attention_decode_layer(p: dict, x: jax.Array, position: jax.Array,
+                           cache_k: jax.Array, cache_v: jax.Array,
+                           cache_positions: jax.Array, write_idx: jax.Array, *,
+                           n_heads: int, n_kv_heads: int, head_dim: int,
+                           rope_variant: str, rope_theta: float,
+                           mrope_sections, window: int = 0,
+                           cross: bool = False):
+    """One decode step.  x: (B, 1, d); position: (B,) absolute position;
+    write_idx: (B,) slot to write KV into (ring index for sliding caches).
+
+    Returns (out, new_cache_k, new_cache_v, new_cache_positions).
+    """
+    b = x.shape[0]
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, 1, n_heads, head_dim)
+    if cross:
+        # Cross attention: cache holds encoder KV; nothing is written.
+        o = decode_attention(q, cache_k, cache_v,
+                             jnp.full((b,), 2 ** 30, jnp.int32),
+                             cache_positions)
+        out = o.reshape(b, 1, n_heads * head_dim) @ p["wo"].astype(x.dtype)
+        return out, cache_k, cache_v, cache_positions
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, 1, n_kv_heads, head_dim)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, 1, n_kv_heads, head_dim)
+    if rope_variant == "mrope":
+        pos3 = jnp.broadcast_to(position[:, None, None], (b, 1, 3))
+        q = apply_mrope(q, pos3, rope_theta, mrope_sections)
+        k = apply_mrope(k, pos3, rope_theta, mrope_sections)
+    elif rope_variant == "rope":
+        q = apply_rope(q, position[:, None], rope_theta)
+        k = apply_rope(k, position[:, None], rope_theta)
+
+    def upd(cache, new):
+        return jax.vmap(
+            lambda c, n, i: lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+        )(cache, new, write_idx)
+
+    cache_k = upd(cache_k, k)
+    cache_v = upd(cache_v, v)
+    cache_positions = jax.vmap(
+        lambda cp, pos, i: lax.dynamic_update_slice_in_dim(
+            cp, pos[None], i, axis=0)
+    )(cache_positions, position, write_idx)
+    cache_k = constrain(cache_k, ("act_batch", "act_cache_seq",
+                                  "act_kv_heads", None))
+    cache_v = constrain(cache_v, ("act_batch", "act_cache_seq",
+                                  "act_kv_heads", None))
+    o = decode_attention(q, cache_k, cache_v, position, cache_positions,
+                         window=window)
+    out = o.reshape(b, 1, n_heads * head_dim) @ p["wo"].astype(x.dtype)
+    return out, cache_k, cache_v, cache_positions
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def swiglu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    gate = x @ p["w_gate"].astype(x.dtype)
+    up = x @ p["w_up"].astype(x.dtype)
+    h = jax.nn.silu(gate) * up
+    h = constrain(h, ("act_batch", "act_seq", "act_ff"))
+    return h @ p["w_down"].astype(h.dtype)

@@ -1,0 +1,263 @@
+"""Parameter specs: one declaration per tensor → init / abstract / sharding.
+
+Every backbone parameter is declared once as a ``ParamSpec`` (shape +
+logical axes + initializer).  From the spec tree we derive:
+
+* ``init_params``     — concrete fp32 params (PRNG-keyed),
+* ``abstract_params`` — ShapeDtypeStruct pytree (dry-run: no allocation),
+* ``logical_axes``    — pytree of logical-axis tuples for the sharding policy.
+
+Stacked-layer leading axes carry the logical name "layers" (never sharded)
+so every backbone lowers to grouped ``lax.scan``s with O(1)-in-depth HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arch import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal|zeros|ones|a_log|dt_bias|conv
+    scale: float = 0.02
+    dtype: str = "float32"
+
+    def stack(self, n: int, axis_name: str = "layers") -> "ParamSpec":
+        return dataclasses.replace(
+            self, shape=(n,) + self.shape, logical=(axis_name,) + self.logical)
+
+
+SpecTree = Dict[str, object]  # nested dict of ParamSpec
+
+
+def _norm(d: int) -> ParamSpec:
+    return ParamSpec((d,), (None,), init="zeros")
+
+
+def attn_specs(cfg: ArchConfig) -> SpecTree:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    return {
+        "wq": ParamSpec((d, nq), ("p_dmodel", "p_heads")),
+        "wk": ParamSpec((d, nkv), ("p_dmodel", "p_kv_heads")),
+        "wv": ParamSpec((d, nkv), ("p_dmodel", "p_kv_heads")),
+        "wo": ParamSpec((nq, d), ("p_heads", "p_dmodel")),
+    }
+
+
+def mlp_specs(cfg: ArchConfig) -> SpecTree:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamSpec((d, f), ("p_dmodel", "p_ff")),
+        "w_up": ParamSpec((d, f), ("p_dmodel", "p_ff")),
+        "w_down": ParamSpec((f, d), ("p_ff", "p_ff_in")),
+    }
+
+
+def moe_specs(cfg: ArchConfig) -> SpecTree:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((d, e), ("p_dmodel", None)),
+        "w_gate": ParamSpec((e, d, f), ("p_experts", "p_dmodel", "p_ff")),
+        "w_up": ParamSpec((e, d, f), ("p_experts", "p_dmodel", "p_ff")),
+        "w_down": ParamSpec((e, f, d), ("p_experts", "p_ff", "p_ff_in")),
+    }
+
+
+def mamba1_specs(cfg: ArchConfig) -> SpecTree:
+    d, di, ds, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    dt_rank = max(d // 16, 1)
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("p_dmodel", "p_dinner")),
+        "conv_w": ParamSpec((k, di), ("p_conv", "p_dinner"), init="conv"),
+        "conv_b": ParamSpec((di,), ("p_dinner",), init="zeros"),
+        "x_dt": ParamSpec((di, dt_rank), ("p_dinner", None)),
+        "dt_proj": ParamSpec((dt_rank, di), (None, "p_dinner"), scale=0.1),
+        "dt_bias": ParamSpec((di,), ("p_dinner",), init="dt_bias"),
+        "wb": ParamSpec((di, ds), ("p_dinner", "p_state")),
+        "wc": ParamSpec((di, ds), ("p_dinner", "p_state")),
+        "a_log": ParamSpec((di, ds), ("p_dinner", "p_state"), init="a_log"),
+        "d_skip": ParamSpec((di,), ("p_dinner",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("p_dinner", "p_dmodel")),
+    }
+
+
+def mamba2_specs(cfg: ArchConfig) -> SpecTree:
+    d, di, ds, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    nh = cfg.resolved_ssm_heads
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("p_dmodel", "p_dinner")),
+        "conv_w": ParamSpec((k, di), ("p_conv", "p_dinner"), init="conv"),
+        "conv_b": ParamSpec((di,), ("p_dinner",), init="zeros"),
+        "wb": ParamSpec((d, ds), ("p_dmodel", "p_state")),
+        "wc": ParamSpec((d, ds), ("p_dmodel", "p_state")),
+        "dt_w": ParamSpec((d, nh), ("p_dmodel", None)),
+        "dt_bias": ParamSpec((nh,), (None,), init="dt_bias"),
+        "a_log": ParamSpec((nh,), (None,), init="a_log"),
+        "d_skip": ParamSpec((nh,), (None,), init="ones"),
+        "gate_norm": ParamSpec((di,), ("p_dinner",), init="zeros"),
+        "out_proj": ParamSpec((di, d), ("p_dinner", "p_dmodel")),
+    }
+
+
+def dense_block_specs(cfg: ArchConfig) -> SpecTree:
+    return {"attn_norm": _norm(cfg.d_model), "attn": attn_specs(cfg),
+            "mlp_norm": _norm(cfg.d_model), "mlp": mlp_specs(cfg)}
+
+
+def moe_block_specs(cfg: ArchConfig) -> SpecTree:
+    return {"attn_norm": _norm(cfg.d_model), "attn": attn_specs(cfg),
+            "mlp_norm": _norm(cfg.d_model), "moe": moe_specs(cfg)}
+
+
+def mamba_block_specs(cfg: ArchConfig) -> SpecTree:
+    body = mamba2_specs(cfg) if cfg.ssm_variant == "mamba2" else mamba1_specs(cfg)
+    return {"norm": _norm(cfg.d_model), "mamba": body}
+
+
+def encoder_block_specs(cfg: ArchConfig) -> SpecTree:
+    return dense_block_specs(cfg)
+
+
+def decoder_xattn_block_specs(cfg: ArchConfig) -> SpecTree:
+    s = dense_block_specs(cfg)
+    s["xattn_norm"] = _norm(cfg.d_model)
+    s["xattn"] = attn_specs(cfg)
+    return s
+
+
+def _stack_tree(tree: SpecTree, n: int) -> SpecTree:
+    return jax.tree.map(lambda s: s.stack(n), tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def layer_pattern(cfg: ArchConfig) -> Dict[str, int]:
+    """Static grouping used by both the spec tree and the forward scan."""
+    if cfg.family in ("dense", "vlm") and cfg.local_global_ratio > 0:
+        r = cfg.local_global_ratio
+        n_groups = cfg.n_layers // (r + 1)
+        tail = cfg.n_layers - n_groups * (r + 1)
+        return {"kind": "local_global", "ratio": r, "n_groups": n_groups,
+                "tail_local": tail}
+    if cfg.family == "hybrid":
+        k = cfg.attn_every
+        assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+        return {"kind": "hybrid", "group": k, "n_groups": cfg.n_layers // k}
+    if cfg.family == "ssm":
+        return {"kind": "uniform_ssm", "n_layers": cfg.n_layers}
+    if cfg.is_moe:
+        return {"kind": "uniform_moe", "n_layers": cfg.n_layers}
+    return {"kind": "uniform_dense", "n_layers": cfg.n_layers}
+
+
+def build_specs(cfg: ArchConfig) -> SpecTree:
+    d = cfg.d_model
+    vpad = cfg.padded_vocab()
+    specs: SpecTree = {
+        "embed": ParamSpec((vpad, d), ("p_vocab", "p_dmodel"), scale=0.02),
+        "final_norm": _norm(d),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((vpad, d), ("p_vocab", "p_dmodel"))
+
+    pat = layer_pattern(cfg)
+    if pat["kind"] == "uniform_dense":
+        specs["blocks"] = _stack_tree(dense_block_specs(cfg), pat["n_layers"])
+    elif pat["kind"] == "uniform_moe":
+        specs["blocks"] = _stack_tree(moe_block_specs(cfg), pat["n_layers"])
+    elif pat["kind"] == "uniform_ssm":
+        specs["blocks"] = _stack_tree(mamba_block_specs(cfg), pat["n_layers"])
+    elif pat["kind"] == "local_global":
+        group = {
+            "local": _stack_tree(
+                _stack_tree(dense_block_specs(cfg), pat["ratio"]),
+                pat["n_groups"]),
+            "global": _stack_tree(dense_block_specs(cfg), pat["n_groups"]),
+        }
+        specs["groups"] = group
+        if pat["tail_local"]:
+            specs["tail_local"] = _stack_tree(dense_block_specs(cfg),
+                                              pat["tail_local"])
+    elif pat["kind"] == "hybrid":
+        specs["groups"] = _stack_tree(
+            _stack_tree(mamba_block_specs(cfg), pat["group"]),
+            pat["n_groups"])
+        specs["shared_attn"] = dense_block_specs(cfg)  # weights shared
+    else:
+        raise ValueError(pat)
+
+    if cfg.is_encdec:
+        specs["enc_blocks"] = _stack_tree(encoder_block_specs(cfg),
+                                          cfg.n_enc_layers)
+        specs["enc_final_norm"] = _norm(d)
+        # decoder blocks get cross-attention
+        specs["blocks"] = _stack_tree(decoder_xattn_block_specs(cfg),
+                                      cfg.n_layers)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Materialization
+# ---------------------------------------------------------------------------
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_one(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    dt = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "a_log":
+        ds = spec.shape[-1]
+        base = jnp.log(jnp.arange(1, ds + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(base, spec.shape).astype(dt)
+    if spec.init == "dt_bias":
+        # inverse-softplus of dt uniformly in [1e-3, 0.1] (mamba init)
+        u = jax.random.uniform(key, spec.shape, jnp.float32,
+                               minval=np.log(1e-3), maxval=np.log(0.1))
+        dt = jnp.exp(u)
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32)
+    if spec.init == "conv":
+        fan_in = spec.shape[0]
+        return jax.random.uniform(
+            key, spec.shape, jnp.float32,
+            minval=-(fan_in ** -0.5), maxval=fan_in ** -0.5)
+    # default: scaled normal
+    return (jax.random.normal(key, spec.shape, jnp.float32)
+            * spec.scale).astype(dt)
+
+
+def init_params(cfg: ArchConfig, key: jax.Array):
+    specs = build_specs(cfg)
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(cfg: ArchConfig):
+    specs = build_specs(cfg)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        specs, is_leaf=_is_spec)
+
+
+def logical_axes(cfg: ArchConfig):
+    specs = build_specs(cfg)
+    return jax.tree.map(lambda s: s.logical, specs, is_leaf=_is_spec)
+
+
+def param_count(cfg: ArchConfig) -> int:
+    specs = build_specs(cfg)
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=_is_spec))

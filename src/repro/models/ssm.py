@@ -1,0 +1,261 @@
+"""State-space (Mamba) layers, adapted for TPU.
+
+Two variants, both lowered as *chunked* computations (HLO stays compact,
+activation memory is O(S/L) checkpoints, and the heavy work is batched
+matmul — what the MXU wants):
+
+* Mamba1 (falcon-mamba): per-(channel,state) diagonal dynamics.  The
+  recurrence runs as an outer ``lax.scan`` over chunks carrying the state
+  with an inner ``associative_scan`` inside each (rematted) chunk.
+* Mamba2 / SSD (zamba2): scalar-per-head decay, so the intra-chunk kernel
+  collapses to dense (L×L) matmuls — the SSD "matmulization" is exactly
+  the GPU-paper insight re-expressed as MXU-shaped einsums.
+
+Each layer returns its final recurrent state so prefill can hand off to
+O(1) decode steps.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.arch import ArchConfig
+from repro.models.layers import rms_norm
+from repro.sharding.policy import constrain
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, d_conv-1, d_inner) rolling conv inputs
+    h: jax.Array      # mamba1: (B, di, ds); mamba2: (B, nh, P, ds)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (k taps as shifts — no conv primitive needed)
+# ---------------------------------------------------------------------------
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                tail: jax.Array | None = None) -> jax.Array:
+    """x: (B, S, di); w: (k, di); tail: (B, k-1, di) carry-in (or zeros)."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, j:j + x.shape[1], :] * w[j].astype(x.dtype)
+              for j in range(k))
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 — chunked selective scan
+# ---------------------------------------------------------------------------
+def _ssm_scan_chunk(h0: jax.Array, decay: jax.Array, inp: jax.Array):
+    """h[t] = decay[t] * h[t-1] + inp[t] within one chunk.
+
+    decay/inp: (B, L, di, ds); h0: (B, di, ds).  Associative combine:
+    (a2, b2) ∘ (a1, b1) = (a1·a2, b1·a2 + b2).
+    """
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    inp0 = inp.at[:, 0].add(decay[:, 0] * h0)
+    a, b = lax.associative_scan(combine, (decay, inp0), axis=1)
+    return b, b[:, -1]
+
+
+def mamba1_layer(p: dict, x: jax.Array, cfg: ArchConfig,
+                 state: SSMState | None = None, chunk: int = 128
+                 ) -> Tuple[jax.Array, SSMState]:
+    """x: (B, S, d_model) -> (y, final_state)."""
+    bsz, s, _ = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_state
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constrain(xin, ("act_batch", "act_seq", "act_dinner"))
+
+    conv_tail = state.conv if state is not None else None
+    xc = causal_conv(xin, p["conv_w"], p["conv_b"], conv_tail)
+    new_conv = lax.dynamic_slice_in_dim(
+        jnp.concatenate([state.conv if state is not None else
+                         jnp.zeros((bsz, cfg.d_conv - 1, di), x.dtype), xin],
+                        axis=1),
+        s, cfg.d_conv - 1, axis=1) if s >= 1 else None
+
+    dt_rank = p["x_dt"].shape[1]
+    dt = jax.nn.softplus(
+        (xc @ p["x_dt"].astype(xc.dtype)) @ p["dt_proj"].astype(xc.dtype)
+        + p["dt_bias"].astype(xc.dtype))                       # (B,S,di)
+    bmat = xc @ p["wb"].astype(xc.dtype)                       # (B,S,ds)
+    cmat = xc @ p["wc"].astype(xc.dtype)                       # (B,S,ds)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))               # (di,ds)
+
+    n_chunks = max(s // chunk, 1)
+    chunk = s // n_chunks
+    dt_c = dt.astype(jnp.float32).reshape(bsz, n_chunks, chunk, di)
+    b_c = bmat.astype(jnp.float32).reshape(bsz, n_chunks, chunk, ds)
+    c_c = cmat.reshape(bsz, n_chunks, chunk, ds)
+    x_c = xc.astype(jnp.float32).reshape(bsz, n_chunks, chunk, di)
+
+    h0 = (state.h if state is not None
+          else jnp.zeros((bsz, di, ds), jnp.float32))
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_body(h, inputs):
+        dtc, bc, cc, xcc = inputs                              # (B,L,·)
+        decay = jnp.exp(dtc[..., None] * a)                    # (B,L,di,ds)
+        inp = (dtc * xcc)[..., None] * bc[:, :, None, :]       # (B,L,di,ds)
+        hs, h_last = _ssm_scan_chunk(h, decay, inp)
+        y = jnp.einsum("blds,bls->bld", hs, cc.astype(jnp.float32))
+        return h_last, y
+
+    h_final, ys = lax.scan(
+        chunk_body, h0,
+        (jnp.moveaxis(dt_c, 1, 0), jnp.moveaxis(b_c, 1, 0),
+         jnp.moveaxis(c_c.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(x_c, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, di)
+    y = y + x_c.reshape(bsz, s, di) * p["d_skip"].astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    y = constrain(y, ("act_batch", "act_seq", "act_dinner"))
+    out = y @ p["out_proj"].astype(y.dtype)
+    return out, SSMState(conv=new_conv, h=h_final)
+
+
+def mamba1_decode(p: dict, x: jax.Array, cfg: ArchConfig,
+                  state: SSMState) -> Tuple[jax.Array, SSMState]:
+    """One step.  x: (B, 1, d_model)."""
+    bsz = x.shape[0]
+    di, ds, k = cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)                         # (B,1,di)
+    window = jnp.concatenate([state.conv.astype(x.dtype), xin], axis=1)
+    xc = jax.nn.silu(
+        jnp.einsum("bkd,kd->bd", window, p["conv_w"].astype(x.dtype))
+        + p["conv_b"].astype(x.dtype))[:, None, :]             # (B,1,di)
+    new_conv = window[:, 1:, :]
+
+    dt = jax.nn.softplus(
+        (xc @ p["x_dt"].astype(xc.dtype)) @ p["dt_proj"].astype(xc.dtype)
+        + p["dt_bias"].astype(xc.dtype)).astype(jnp.float32)   # (B,1,di)
+    bmat = (xc @ p["wb"].astype(xc.dtype)).astype(jnp.float32)
+    cmat = (xc @ p["wc"].astype(xc.dtype)).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt[:, 0, :, None] * a)                     # (B,di,ds)
+    inp = (dt[:, 0, :] * xc.astype(jnp.float32)[:, 0, :])[..., None] \
+        * bmat[:, 0, None, :]
+    h = decay * state.h + inp
+    y = jnp.einsum("bds,bs->bd", h, cmat[:, 0])[:, None, :]
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(y.dtype)
+    return out, SSMState(conv=new_conv, h=h)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 — SSD chunked matmul form
+# ---------------------------------------------------------------------------
+def mamba2_layer(p: dict, x: jax.Array, cfg: ArchConfig,
+                 state: SSMState | None = None, chunk: int = 256
+                 ) -> Tuple[jax.Array, SSMState]:
+    """x: (B, S, d_model) -> (y, final_state).  Scalar decay per head."""
+    bsz, s, _ = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_state
+    nh = cfg.resolved_ssm_heads
+    hp = di // nh
+
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constrain(xin, ("act_batch", "act_seq", "act_dinner"))
+    conv_tail = state.conv if state is not None else None
+    xc = causal_conv(xin, p["conv_w"], p["conv_b"], conv_tail)
+    new_conv = lax.dynamic_slice_in_dim(
+        jnp.concatenate([state.conv if state is not None else
+                         jnp.zeros((bsz, cfg.d_conv - 1, di), x.dtype), xin],
+                        axis=1),
+        s, cfg.d_conv - 1, axis=1)
+
+    bmat = (x @ p["wb"].astype(x.dtype)).astype(jnp.float32)   # (B,S,ds)
+    cmat = (x @ p["wc"].astype(x.dtype)).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (x @ p["dt_w"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                    # (B,S,nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))               # (nh,)
+
+    n_chunks = max(s // chunk, 1)
+    chunk = s // n_chunks
+    xh = xc.astype(jnp.float32).reshape(bsz, n_chunks, chunk, nh, hp)
+    dt_c = dt.reshape(bsz, n_chunks, chunk, nh)
+    b_c = bmat.reshape(bsz, n_chunks, chunk, ds)
+    c_c = cmat.reshape(bsz, n_chunks, chunk, ds)
+
+    seg = dt_c * a                                             # (B,n,L,nh)
+    l_cum = jnp.cumsum(seg, axis=2)                            # inclusive
+    # --- diagonal (intra-chunk) block: dense L×L matmuls ---
+    g = jnp.einsum("bnls,bnms->bnlm", c_c, b_c)                # (B,n,L,L)
+    rel = l_cum[:, :, :, None, :] - l_cum[:, :, None, :, :]    # (B,n,L,L,nh)
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tril[None, None, :, :, None], jnp.exp(rel), 0.0)
+    att = g[..., None] * decay * dt_c[:, :, None, :, :]        # (B,n,L,L,nh)
+    y_diag = jnp.einsum("bnlsh,bnshp->bnlhp", att, xh)
+
+    # --- chunk summary states + inter-chunk scan ---
+    decay_last = jnp.exp(l_cum[:, :, -1:, :] - l_cum)          # (B,n,L,nh)
+    xw = xh * (dt_c * decay_last)[..., None]                   # (B,n,L,nh,P)
+    s_c = jnp.einsum("bnlhp,bnls->bnhps", xw, b_c)             # (B,n,nh,P,ds)
+    chunk_decay = jnp.exp(seg.sum(axis=2))                     # (B,n,nh)
+
+    h0 = (state.h if state is not None
+          else jnp.zeros((bsz, nh, hp, ds), jnp.float32))
+
+    def inter(h, inputs):
+        sc, cd = inputs                                        # per chunk
+        h_new = cd[..., None, None] * h + sc
+        return h_new, h                                        # emit h_prev
+
+    h_final, h_prevs = lax.scan(
+        inter, h0, (jnp.moveaxis(s_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                      # (B,n,nh,P,ds)
+    y_inter = jnp.einsum("bnls,bnhps->bnlhp", c_c, h_prevs) \
+        * jnp.exp(l_cum)[..., None]
+    y = (y_diag + y_inter).reshape(bsz, s, nh, hp)
+    y = y + xh.reshape(bsz, s, nh, hp) * p["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(p["gate_norm"], y, cfg.norm_eps)
+    y = constrain(y, ("act_batch", "act_seq", "act_dinner"))
+    return y @ p["out_proj"].astype(y.dtype), SSMState(new_conv, h_final)
+
+
+def mamba2_decode(p: dict, x: jax.Array, cfg: ArchConfig,
+                  state: SSMState) -> Tuple[jax.Array, SSMState]:
+    """One step.  x: (B, 1, d_model)."""
+    bsz = x.shape[0]
+    di, ds = cfg.d_inner, cfg.ssm_state
+    nh = cfg.resolved_ssm_heads
+    hp = di // nh
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([state.conv.astype(x.dtype), xin], axis=1)
+    xc = jax.nn.silu(
+        jnp.einsum("bkd,kd->bd", window, p["conv_w"].astype(x.dtype))
+        + p["conv_b"].astype(x.dtype))                         # (B,di)
+    new_conv = window[:, 1:, :]
+
+    bmat = (x[:, 0] @ p["wb"].astype(x.dtype)).astype(jnp.float32)
+    cmat = (x[:, 0] @ p["wc"].astype(x.dtype)).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (x[:, 0] @ p["dt_w"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                    # (B,nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xf = xc.astype(jnp.float32).reshape(bsz, nh, hp)
+    decay = jnp.exp(dt * a)                                    # (B,nh)
+    inp = jnp.einsum("bhp,bs->bhps", xf * dt[..., None], bmat)
+    h = decay[..., None, None] * state.h + inp
+    y = jnp.einsum("bhps,bs->bhp", h, cmat)
+    y = y + xf * p["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(p["gate_norm"], y, cfg.norm_eps)
+    return y @ p["out_proj"].astype(y.dtype), SSMState(new_conv, h)

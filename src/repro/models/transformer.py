@@ -1,0 +1,512 @@
+"""Decoder-only backbone: dense / MoE / hybrid(Mamba2+shared-attn) / SSM / VLM.
+
+One generic model consumes an ``ArchConfig``.  Depth is always lowered as
+``lax.scan`` over stacked per-layer params (grouped scans for
+heterogeneous patterns), so HLO size is O(1) in depth and remat policies
+apply per scanned body.
+
+Three entry points per arch:
+* ``forward_train``   — full-sequence forward + LM loss (microbatch view).
+* ``forward_prefill`` — full-sequence forward emitting a decode cache.
+* ``forward_decode``  — one token against the cache (serve_step).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import flags
+from repro.core.arch import ArchConfig
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (attention_decode_layer, attention_layer,
+                                 rms_norm, swiglu_mlp)
+from repro.models.moe import moe_layer
+from repro.models.params import layer_pattern
+from repro.sharding.policy import constrain
+
+def maybe_cast_params(params, cfg):
+    """bf16_params flag: cast >=2D f32 masters to the activation dtype
+    once at step entry, so FSDP all-gathers move bf16 (not f32 masters).
+    1D scales / ssm dynamics stay f32."""
+    if not flags.get("bf16_params"):
+        return params
+    dt = cfg.activation_dtype
+
+    def cast(leaf):
+        if leaf.ndim >= 2 and leaf.dtype == jnp.float32:
+            return leaf.astype(dt)
+        return leaf
+    casted = jax.tree.map(cast, params)
+    # Barrier: without it XLA sinks the convert into the layer scan and
+    # the FSDP all-gather still moves the f32 master (measured: zero
+    # collective-byte change).  With it, the sharded bf16 copy
+    # materializes once and every gather moves half the bytes.
+    return jax.lax.optimization_barrier(casted)
+
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def _maybe_remat(fn, policy: Optional[str]):
+    if policy is None or policy == "none":
+        return fn
+    return jax.checkpoint(fn, policy=REMAT_POLICIES[policy],
+                          prevent_cse=False)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def embed_tokens(params, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    table = params["embed"].astype(cfg.activation_dtype)
+    x = jnp.take(table, tokens, axis=0)
+    if cfg.family != "cnn":
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype) if cfg.name.startswith(
+            "gemma") else x
+    return constrain(x, ("act_batch", "act_res_seq", "act_dmodel"))
+
+
+def unembed(params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    table = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype))
+    return constrain(logits, ("act_batch", "act_seq", "act_vocab"))
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array, vocab_size: int
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Cross-entropy with padded-vocab masking; labels == -1 are ignored."""
+    v_pad = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if v_pad > vocab_size:
+        col = lax.broadcasted_iota(jnp.int32, (v_pad,), 0)
+        logits = logits + jnp.where(col < vocab_size, 0.0, -1e30)
+    valid = labels >= 0
+    safe_labels = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, safe_labels[..., None], axis=-1)[..., 0]
+    nll = (logz - picked) * valid
+    n = jnp.maximum(valid.sum(), 1)
+    loss = nll.sum() / n
+    return loss, {"loss": loss, "tokens": n,
+                  "ppl_log": loss}
+
+
+# ---------------------------------------------------------------------------
+# Block bodies
+# ---------------------------------------------------------------------------
+def _attn_kwargs(cfg: ArchConfig, window: int = 0):
+    return dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_variant=cfg.rope_variant,
+                rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
+                window=window)
+
+
+def dense_block(cfg: ArchConfig, p, x, positions, *, window=0,
+                causal=True, collect_kv=False):
+    h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
+    attn_out, kv = attention_layer(p["attn"], h, positions, causal=causal,
+                                   **_attn_kwargs(cfg, window))
+    x = x + attn_out
+    h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
+    x = x + swiglu_mlp(p["mlp"], h)
+    x = constrain(x, ("act_batch", "act_res_seq", "act_dmodel"))
+    return (x, kv) if collect_kv else (x, None)
+
+
+def moe_block(cfg: ArchConfig, p, x, positions, *, collect_kv=False):
+    h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
+    attn_out, kv = attention_layer(p["attn"], h, positions,
+                                   **_attn_kwargs(cfg))
+    x = x + attn_out
+    h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
+    x = x + moe_layer(p["moe"], h, cfg)
+    x = constrain(x, ("act_batch", "act_res_seq", "act_dmodel"))
+    return (x, kv) if collect_kv else (x, None)
+
+
+def mamba_block(cfg: ArchConfig, p, x, state=None):
+    h = rms_norm(p["norm"], x, cfg.norm_eps)
+    fn = (ssm_mod.mamba2_layer if cfg.ssm_variant == "mamba2"
+          else ssm_mod.mamba1_layer)
+    y, new_state = fn(p["mamba"], h, cfg, state)
+    x = x + y
+    x = constrain(x, ("act_batch", "act_res_seq", "act_dmodel"))
+    return x, new_state
+
+
+def dense_block_decode(cfg: ArchConfig, p, x, position, cache_k, cache_v,
+                       cache_pos, write_idx, *, window=0):
+    h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
+    attn_out, ck, cv, cp = attention_decode_layer(
+        p["attn"], h, position, cache_k, cache_v, cache_pos, write_idx,
+        **_attn_kwargs(cfg, window))
+    x = x + attn_out
+    h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
+    x = x + swiglu_mlp(p["mlp"], h)
+    return x, ck, cv, cp
+
+
+def moe_block_decode(cfg: ArchConfig, p, x, position, cache_k, cache_v,
+                     cache_pos, write_idx):
+    h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
+    attn_out, ck, cv, cp = attention_decode_layer(
+        p["attn"], h, position, cache_k, cache_v, cache_pos, write_idx,
+        **_attn_kwargs(cfg))
+    x = x + attn_out
+    h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
+    x = x + moe_layer(p["moe"], h, cfg)
+    return x, ck, cv, cp
+
+
+def mamba_block_decode(cfg: ArchConfig, p, x, state):
+    h = rms_norm(p["norm"], x, cfg.norm_eps)
+    fn = (ssm_mod.mamba2_decode if cfg.ssm_variant == "mamba2"
+          else ssm_mod.mamba1_decode)
+    y, new_state = fn(p["mamba"], h, cfg, state)
+    return x + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Trunk (pattern-dispatched scans)
+# ---------------------------------------------------------------------------
+def trunk_forward(cfg: ArchConfig, params, x, positions, *,
+                  remat: str = "none", collect_cache: bool = False):
+    """Run all blocks.  Returns (x, cache_entries | None)."""
+    pat = layer_pattern(cfg)
+    caches: Dict[str, jax.Array] = {}
+
+    if pat["kind"] in ("uniform_dense", "uniform_moe"):
+        is_moe = pat["kind"] == "uniform_moe"
+
+        def body(h, p):
+            fn = moe_block if is_moe else dense_block
+            h, kv = fn(cfg, p, h, positions, collect_kv=collect_cache)
+            return h, kv
+        body = _maybe_remat(body, remat)
+        x, kvs = lax.scan(body, x, params["blocks"])
+        if collect_cache and kvs is not None:
+            caches["k"], caches["v"] = kvs
+
+    elif pat["kind"] == "uniform_ssm":
+        def body(h, p):
+            h, st = mamba_block(cfg, p, h)
+            return h, st if collect_cache else None
+        body = _maybe_remat(body, remat)
+        x, states = lax.scan(body, x, params["blocks"])
+        if collect_cache:
+            caches["ssm"] = states
+
+    elif pat["kind"] == "local_global":
+        w = cfg.sliding_window
+
+        def local_body(h, p):
+            h, kv = dense_block(cfg, p, h, positions, window=w,
+                                collect_kv=collect_cache)
+            return h, kv
+
+        def group_body(h, p):
+            h, local_kv = lax.scan(_maybe_remat(local_body, remat),
+                                   h, p["local"])
+            h, global_kv = _maybe_remat(
+                lambda hh, pp: dense_block(cfg, pp, hh, positions,
+                                           collect_kv=collect_cache),
+                remat)(h, p["global"])
+            return h, (local_kv, global_kv)
+
+        x, (local_kvs, global_kvs) = lax.scan(
+            group_body, x,
+            {"local": params["groups"]["local"],
+             "global": params["groups"]["global"]})
+        if "tail_local" in params:
+            x, tail_kvs = lax.scan(_maybe_remat(local_body, remat), x,
+                                   params["tail_local"])
+        else:
+            tail_kvs = None
+        if collect_cache:
+            caches["local_k"], caches["local_v"] = local_kvs
+            caches["global_k"], caches["global_v"] = global_kvs
+            if tail_kvs is not None:
+                caches["tail_k"], caches["tail_v"] = tail_kvs
+
+    elif pat["kind"] == "hybrid":
+        shared = params["shared_attn"]
+
+        def mamba_body(h, p):
+            h, st = mamba_block(cfg, p, h)
+            return h, st if collect_cache else None
+
+        def group_body(h, p):
+            h, states = lax.scan(_maybe_remat(mamba_body, remat), h, p)
+            h, kv = _maybe_remat(
+                lambda hh, pp: dense_block(cfg, pp, hh, positions,
+                                           collect_kv=collect_cache),
+                remat)(h, shared)
+            return h, (states, kv)
+
+        x, (states, kvs) = lax.scan(group_body, x, params["groups"])
+        if collect_cache:
+            caches["ssm"] = states
+            caches["attn_k"], caches["attn_v"] = kvs
+    else:
+        raise ValueError(pat)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, (caches if collect_cache else None)
+
+
+def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
+                 write_full, write_local):
+    """One-token pass through all blocks, updating the cache pytree."""
+    pat = layer_pattern(cfg)
+    new_cache = dict(cache)
+
+    if pat["kind"] in ("uniform_dense", "uniform_moe"):
+        is_moe = pat["kind"] == "uniform_moe"
+
+        def body(h, pc):
+            p, ck, cv = pc
+            fn = moe_block_decode if is_moe else dense_block_decode
+            h, ck, cv, cp = fn(cfg, p, h, position, ck, cv,
+                               cache["full_pos"], write_full)
+            return h, (ck, cv)
+        x, (ks, vs) = lax.scan(body, x, (params["blocks"],
+                                         cache["k"], cache["v"]))
+        new_cache["k"], new_cache["v"] = ks, vs
+
+    elif pat["kind"] == "uniform_ssm":
+        def body(h, pc):
+            p, st = pc
+            h, st = mamba_block_decode(cfg, p, h, ssm_mod.SSMState(*st))
+            return h, tuple(st)
+        x, states = lax.scan(body, x, (params["blocks"],
+                                       tuple(cache["ssm"])))
+        new_cache["ssm"] = ssm_mod.SSMState(*states)
+
+    elif pat["kind"] == "local_global":
+        w = cfg.sliding_window
+
+        def local_body(h, pc):
+            p, ck, cv = pc
+            h, ck, cv, cp = dense_block_decode(
+                cfg, p, h, position, ck, cv, cache["local_pos"],
+                write_local, window=w)
+            return h, (ck, cv)
+
+        def group_body(h, pc):
+            p, lk, lv, gk, gv = pc
+            h, (lks, lvs) = lax.scan(local_body, h, (p["local"], lk, lv))
+            h, gk, gv, _ = dense_block_decode(
+                cfg, p["global"], h, position, gk, gv,
+                cache["full_pos"], write_full)
+            return h, (lks, lvs, gk, gv)
+
+        x, (lks, lvs, gks, gvs) = lax.scan(
+            group_body, x,
+            ({"local": params["groups"]["local"],
+              "global": params["groups"]["global"]},
+             cache["local_k"], cache["local_v"],
+             cache["global_k"], cache["global_v"]))
+        new_cache.update(local_k=lks, local_v=lvs,
+                         global_k=gks, global_v=gvs)
+        if "tail_k" in cache:
+            x, (tks, tvs) = lax.scan(
+                local_body, x,
+                (params["tail_local"], cache["tail_k"], cache["tail_v"]))
+            new_cache.update(tail_k=tks, tail_v=tvs)
+
+    elif pat["kind"] == "hybrid":
+        shared = params["shared_attn"]
+
+        def mamba_body(h, pc):
+            p, st = pc
+            h, st = mamba_block_decode(cfg, p, h, ssm_mod.SSMState(*st))
+            return h, tuple(st)
+
+        def group_body(h, pc):
+            p, st, ck, cv = pc
+            h, states = lax.scan(mamba_body, h, (p, tuple(st)))
+            h, ck, cv, _ = dense_block_decode(
+                cfg, shared, h, position, ck, cv,
+                cache["full_pos"], write_full)
+            return h, (states, ck, cv)
+
+        x, (states, ks, vs) = lax.scan(
+            group_body, x,
+            (params["groups"], tuple(cache["ssm"]),
+             cache["attn_k"], cache["attn_v"]))
+        new_cache["ssm"] = ssm_mod.SSMState(*states)
+        new_cache["attn_k"], new_cache["attn_v"] = ks, vs
+    else:
+        raise ValueError(pat)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+def default_positions(cfg: ArchConfig, batch: int, seq: int) -> jax.Array:
+    pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+    if cfg.rope_variant == "mrope":
+        return jnp.broadcast_to(pos[..., None], (batch, seq, 3))
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+def forward_train(cfg: ArchConfig, params, inputs: Dict[str, jax.Array], *,
+                  remat: str = "full"):
+    """inputs: tokens (B,S) int32 OR embeddings (B,S,d); labels (B,S)."""
+    params = maybe_cast_params(params, cfg)
+    if "embeddings" in inputs:
+        x = inputs["embeddings"].astype(cfg.activation_dtype)
+        x = constrain(x, ("act_batch", "act_res_seq", "act_dmodel"))
+        b, s = x.shape[:2]
+    else:
+        tokens = inputs["tokens"]
+        b, s = tokens.shape
+        x = embed_tokens(params, tokens, cfg)
+    positions = inputs.get("positions")
+    if positions is None:
+        positions = default_positions(cfg, b, s)
+    x, _ = trunk_forward(cfg, params, x, positions, remat=remat)
+    logits = unembed(params, x, cfg)
+    return lm_loss(logits, inputs["labels"], cfg.vocab_size)
+
+
+def forward_prefill(cfg: ArchConfig, params, inputs: Dict[str, jax.Array]):
+    """Returns (last_token_logits, cache)."""
+    params = maybe_cast_params(params, cfg)
+    if "embeddings" in inputs:
+        x = inputs["embeddings"].astype(cfg.activation_dtype)
+        b, s = x.shape[:2]
+    else:
+        tokens = inputs["tokens"]
+        b, s = tokens.shape
+        x = embed_tokens(params, tokens, cfg)
+    positions = inputs.get("positions")
+    if positions is None:
+        positions = default_positions(cfg, b, s)
+    x, caches = trunk_forward(cfg, params, x, positions, collect_cache=True)
+    logits = unembed(params, x[:, -1:, :], cfg)[:, 0]
+    cache = _cache_from_prefill(cfg, caches, positions, b, s)
+    return logits, cache
+
+
+def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
+                   position: jax.Array):
+    """token: (B,) int32; position: (B,) absolute index of this token."""
+    params = maybe_cast_params(params, cfg)
+    x = embed_tokens(params, token[:, None], cfg)
+    w = cfg.sliding_window
+    write_full = position
+    write_local = position % w if w else position
+    x, new_cache = trunk_decode(cfg, params, x, position, cache,
+                                write_full=write_full,
+                                write_local=write_local)
+    logits = unembed(params, x, cfg)[:, 0]
+    # position bookkeeping lives outside trunk_decode (shared across layers)
+    if "full_pos" in new_cache:
+        new_cache["full_pos"] = _write_pos(new_cache["full_pos"], position,
+                                           write_full)
+    if "local_pos" in new_cache:
+        new_cache["local_pos"] = _write_pos(new_cache["local_pos"], position,
+                                            write_local)
+    return logits, new_cache
+
+
+def _write_pos(pos_arr, position, idx):
+    return jax.vmap(
+        lambda cp, pv, i: lax.dynamic_update_slice_in_dim(cp, pv[None], i, 0)
+    )(pos_arr, position, idx)
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+def _ring_from_prefill(k: jax.Array, positions: jax.Array, w: int):
+    """Take the last w timesteps of (.., B, S, kv, hd) and place them into
+    ring slots (pos mod w).  Leading stacked dims are preserved."""
+    s = k.shape[-3]
+    if s <= w:
+        pad = [(0, 0)] * (k.ndim - 3) + [(0, w - s), (0, 0), (0, 0)]
+        return jnp.pad(k, pad)
+    last = k[..., s - w:, :, :]
+    slots = (positions[0, s - w:] if positions.ndim == 2
+             else positions[0, s - w:, 0]) % w
+    out = jnp.zeros(k.shape[:-3] + (w,) + k.shape[-2:], k.dtype)
+    return out.at[..., slots, :, :].set(last)
+
+
+def _constrain_kv_cache(arr: jax.Array) -> jax.Array:
+    """Stacked KV cache (..., B, S, kv, hd): store seq-sharded ("model"
+    under prefill rules) — a replicated 32k cache costs model-axis ×
+    the HBM (measured 21.5 GiB/device on qwen2-72b prefill)."""
+    nd = arr.ndim
+    axes = (None,) * (nd - 4) + ("act_batch", "act_cache_seq",
+                                 "act_kv_heads", None)
+    return constrain(arr, axes)
+
+
+def _cache_from_prefill(cfg: ArchConfig, caches, positions, b, s):
+    caches = {k: (_constrain_kv_cache(v) if k.split("_")[-1] in ("k", "v")
+                  else v)
+              for k, v in caches.items()}
+    cache: Dict[str, jax.Array] = {}
+    pos1d = positions if positions.ndim == 2 else positions[..., 0]
+    pat = layer_pattern(cfg)
+    w = cfg.sliding_window
+
+    if pat["kind"] in ("uniform_dense", "uniform_moe"):
+        cache["k"], cache["v"] = caches["k"], caches["v"]
+        cache["full_pos"] = pos1d
+    elif pat["kind"] == "uniform_ssm":
+        cache["ssm"] = caches["ssm"]
+    elif pat["kind"] == "local_global":
+        cache["local_k"] = _ring_from_prefill(caches["local_k"], positions, w)
+        cache["local_v"] = _ring_from_prefill(caches["local_v"], positions, w)
+        cache["global_k"], cache["global_v"] = (caches["global_k"],
+                                                caches["global_v"])
+        if "tail_k" in caches:
+            cache["tail_k"] = _ring_from_prefill(caches["tail_k"], positions, w)
+            cache["tail_v"] = _ring_from_prefill(caches["tail_v"], positions, w)
+        cache["full_pos"] = pos1d
+        last_w = jnp.arange(max(s - w, 0), max(s - w, 0) + w)
+        lp = jnp.where(last_w < s, last_w, -1).astype(jnp.int32)
+        # invalid entries keep their own slot so they never collide
+        slots = jnp.where(lp >= 0, lp % w, jnp.arange(w))
+        local_pos = jnp.full((w,), -1, jnp.int32).at[slots].set(lp)
+        cache["local_pos"] = jnp.broadcast_to(local_pos, (b, w))
+    elif pat["kind"] == "hybrid":
+        cache["ssm"] = caches["ssm"]
+        cache["attn_k"], cache["attn_v"] = caches["attn_k"], caches["attn_v"]
+        cache["full_pos"] = pos1d
+    return cache
+
+
+def grow_cache(cfg: ArchConfig, cache, extra: int):
+    """Extend full-attention cache seq dims by ``extra`` slots (padded)."""
+    def grow(name, arr):
+        pad = [(0, 0)] * arr.ndim
+        pad[-3] = (0, extra)
+        return jnp.pad(arr, pad)
+
+    out = dict(cache)
+    for key in ("k", "v", "global_k", "global_v", "attn_k", "attn_v"):
+        if key in out:
+            out[key] = grow(key, out[key])
+    if "full_pos" in out:
+        out["full_pos"] = jnp.pad(out["full_pos"], ((0, 0), (0, extra)),
+                                  constant_values=-1)
+    return out

@@ -1,0 +1,33 @@
+"""Target-hardware model: TPU v5e chip (the 'target device database').
+
+The Edge Impulse analogue: the platform holds a per-target model (clock,
+SRAM, flash for a Cortex-M; the triple below for a v5e chip) and scores
+candidate deployments against it *before* touching hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipModel:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12        # FLOP/s per chip
+    hbm_bandwidth: float = 819e9           # bytes/s per chip
+    hbm_bytes: int = 16 * 1024 ** 3        # 16 GiB per chip
+    ici_link_bandwidth: float = 50e9       # bytes/s per link (~50 GB/s)
+    ici_links_per_chip: int = 4            # 2D torus on v5e
+    dcn_bandwidth: float = 25e9            # bytes/s per host-ish (pod axis)
+    vmem_bytes: int = 128 * 1024 ** 2      # ~128 MiB VMEM (v5e: 128MB)
+    mxu_tile: int = 128                    # systolic array dim
+
+    @property
+    def ici_bandwidth(self) -> float:
+        """Aggregate ICI injection bandwidth per chip."""
+        return self.ici_link_bandwidth * self.ici_links_per_chip
+
+
+V5E = ChipModel()
+
+# int8 path (quantized serving — paper C5): v5e int8 peak is 394 TOPS.
+V5E_INT8 = ChipModel(name="tpu-v5e-int8", peak_flops_bf16=394e12)

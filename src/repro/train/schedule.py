@@ -1,0 +1,53 @@
+"""LR schedules + the paper's "learning rate finding" (§4.3).
+
+Edge Impulse lists learning-rate finding among its stable-training
+optimisations; ``lr_finder`` is the standard exponential-sweep variant:
+run N probe steps with exponentially increasing lr, pick the lr one
+decade below the divergence knee.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def warmup_cosine(step, *, base_lr: float, warmup: int, total: int,
+                  min_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / max(warmup, 1)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5
+                     * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def constant(step, *, base_lr: float):
+    return jnp.asarray(base_lr, jnp.float32)
+
+
+def lr_finder(step_fn: Callable[[float], float], *,
+              lr_min: float = 1e-6, lr_max: float = 1.0,
+              n_probe: int = 20, smooth: float = 0.7
+              ) -> Tuple[float, List[Tuple[float, float]]]:
+    """``step_fn(lr) -> loss`` runs one probe training step at that lr
+    (caller resets state between probes or accepts the drift, as the
+    classic fastai finder does).  Returns (suggested_lr, curve)."""
+    lrs = np.exp(np.linspace(np.log(lr_min), np.log(lr_max), n_probe))
+    curve: List[Tuple[float, float]] = []
+    ema = None
+    best_lr, best_slope = lr_min, 0.0
+    prev = None
+    for lr in lrs:
+        loss = float(step_fn(float(lr)))
+        ema = loss if ema is None else smooth * ema + (1 - smooth) * loss
+        curve.append((float(lr), ema))
+        if prev is not None:
+            slope = (ema - prev) / ema
+            if slope < best_slope:
+                best_slope, best_lr = slope, lr
+        prev = ema
+        if not np.isfinite(loss) or (curve and ema > 4 * curve[0][1]):
+            break  # diverged — stop the sweep
+    return float(best_lr / 10 if best_lr > lr_min else best_lr), curve

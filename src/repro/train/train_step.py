@@ -1,0 +1,96 @@
+"""train_step factory: loss → grad-accumulation scan → (compressed)
+reduce → AdamW.  Built once per (arch × shape × policy) and AOT-lowered
+by both the trainer and the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.arch import ArchConfig, ShapeConfig
+from repro.models.api import model_fns
+from repro.sharding.policy import AxisRules, use_rules
+from repro.train import compression as comp
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def make_train_step(cfg: ArchConfig, *, n_microbatch: int = 1,
+                    remat: str = "full", rules: Optional[AxisRules] = None,
+                    mesh=None, opt: AdamWConfig = AdamWConfig(),
+                    grad_compression: Optional[str] = None,
+                    lr_from_step: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params', opt', metrics).
+
+    ``batch`` leaves have a leading global-batch dim; with
+    ``n_microbatch > 1`` the batch is split and grads are accumulated in
+    an ``lax.scan`` (sequential microbatches — the standard memory /
+    throughput trade).
+    """
+    fns = model_fns(cfg)
+
+    def loss_fn(params, micro):
+        loss, metrics = fns.forward_train(cfg, params, micro, remat=remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _context(fn):
+        if rules is None or mesh is None:
+            return fn
+
+        @functools.wraps(fn)
+        def wrapped(*a, **k):
+            with use_rules(rules, mesh):
+                return fn(*a, **k)
+        return wrapped
+
+    @_context
+    def train_step(params, opt_state, batch):
+        if n_microbatch > 1:
+            micros = jax.tree.map(
+                lambda x: x.reshape(n_microbatch, x.shape[0] // n_microbatch,
+                                    *x.shape[1:]),
+                batch)
+
+            def micro_body(acc, micro):
+                (loss, metrics), grads = grad_fn(params, micro)
+                acc_g, acc_loss = acc
+                acc_g = jax.tree.map(jnp.add, acc_g, grads)
+                return (acc_g, acc_loss + loss), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = lax.scan(
+                micro_body, (zero_g, jnp.zeros((), jnp.float32)), micros)
+            grads = jax.tree.map(lambda g: g / n_microbatch, grads)
+            loss = loss_sum / n_microbatch
+        else:
+            (loss, _), grads = grad_fn(params, batch)
+
+        if grad_compression and grad_compression != "none":
+            # caller must init opt_state["residual"] (error feedback)
+            residual = opt_state["residual"]
+            grads, residual = comp.compress_grads(grads, residual,
+                                                  grad_compression)
+        else:
+            residual = None
+        lr = None  # AdamWConfig.lr; schedules handled by the trainer
+        new_params, new_opt, om = adamw_update(grads, opt_state, params, opt,
+                                               lr)
+        if residual is not None:
+            new_opt["residual"] = residual
+        metrics = {"loss": loss, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def batch_reshape_check(shape: ShapeConfig, n_microbatch: int) -> None:
+    if shape.global_batch % n_microbatch:
+        raise ValueError(
+            f"global_batch {shape.global_batch} % n_microbatch "
+            f"{n_microbatch} != 0")

@@ -1,0 +1,174 @@
+"""Platform-core tests: impulse, quantize, estimator, compiler, tuner,
+calibration, active learning."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import calibration as cal
+from repro.core import estimator as est
+from repro.core import quantize as qz
+from repro.core.active_learning import (ProximityLabeler,
+                                        active_learning_round, pca_2d)
+from repro.core.blocks import make_dsp_block, make_learn_block
+from repro.core.eon_compiler import compile_impulse
+from repro.core.impulse import Impulse
+from repro.core.tuner import EONTuner
+from repro.data.synthetic import event_stream, keyword_audio
+
+
+N_SAMPLES = 4000
+
+
+@pytest.fixture(scope="module")
+def kws_data():
+    from repro.data.dataset import Dataset
+    ds = Dataset()
+    ds.add_many(keyword_audio(n_per_class=18, n_classes=3,
+                              n_samples=N_SAMPLES))
+    return ds
+
+
+@pytest.fixture(scope="module")
+def trained_impulse(kws_data):
+    imp = Impulse(make_dsp_block("mfcc", n_mels=32, n_coeffs=10),
+                  make_learn_block("conv1d-stack", n_blocks=2, ch_first=16,
+                                   ch_last=32, n_classes=3),
+                  input_shape=N_SAMPLES)
+    imp.init(jax.random.key(0))
+    xtr, ytr = kws_data.arrays("train")
+    imp.fit((np.asarray(xtr), np.asarray(ytr)), epochs=5, batch_size=16,
+            lr=2e-3)
+    return imp
+
+
+def test_impulse_trains(trained_impulse, kws_data):
+    xte, yte = kws_data.arrays("test")
+    acc = trained_impulse.evaluate(trained_impulse.params,
+                                   np.asarray(xte), np.asarray(yte))
+    assert acc >= 0.7, acc
+
+
+def test_int8_quantization_accuracy(trained_impulse, kws_data):
+    """Paper Table 4: int8 stays within a few points of float."""
+    xte, yte = kws_data.arrays("test")
+    xtr, _ = kws_data.arrays("train")
+    trained_impulse.quantize(np.asarray(xtr[:16]))
+    f32 = trained_impulse.evaluate(trained_impulse.params,
+                                   np.asarray(xte), np.asarray(yte))
+    i8 = trained_impulse.int8_accuracy(np.asarray(xte), np.asarray(yte))
+    assert i8 >= f32 - 0.1, (f32, i8)
+    assert trained_impulse.qparams.meta["compression"] > 2.5
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 4))
+def test_quantize_roundtrip_error_bound(seed, ndim):
+    """Property: per-channel int8 round trip error <= scale/2 = amax/254."""
+    rng = np.random.RandomState(seed % (2 ** 31))
+    shape = tuple(rng.randint(2, 8) for _ in range(ndim))
+    w = jnp.asarray(rng.randn(*shape) * rng.uniform(0.01, 10), jnp.float32)
+    qp = qz.quantize_params({"w": w})
+    fq = qz.fake_quant_params(qp)["w"]
+    axes = tuple(range(w.ndim - 1))
+    amax = np.max(np.abs(np.asarray(w)), axis=axes, keepdims=True)
+    bound = amax / 254.0 + 1e-7
+    assert np.all(np.abs(np.asarray(w - fq)) <= bound + 1e-6)
+
+
+def test_qat_ste_gradient_is_identity():
+    w = jnp.asarray(np.random.RandomState(0).randn(8, 8), jnp.float32)
+    g = jax.grad(lambda p: jnp.sum(qz.fake_quant_ste(p) ** 2))(w)
+    expect = jax.grad(lambda p: jnp.sum(
+        (p + jax.lax.stop_gradient(qz.fake_quant_ste(p) - p)) ** 2))(w)
+    np.testing.assert_allclose(g, expect)
+
+
+def test_estimator_engine_ordering(trained_impulse):
+    """EON must beat TFLM on RAM and flash (Table 4's claim)."""
+    for int8 in (False, True):
+        tflm = est.estimate_impulse(trained_impulse, "nano33ble",
+                                    engine="tflm", int8=int8)
+        eon = est.estimate_impulse(trained_impulse, "nano33ble",
+                                   engine="eon", int8=int8)
+        assert eon.ram_kb < tflm.ram_kb
+        assert eon.flash_kb < tflm.flash_kb
+    # int8 must beat float on flash and nn latency (Table 2/4)
+    f = est.estimate_impulse(trained_impulse, "nano33ble", int8=False)
+    q = est.estimate_impulse(trained_impulse, "nano33ble", int8=True)
+    assert q.flash_kb < f.flash_kb
+    assert q.nn_latency_ms < f.nn_latency_ms
+
+
+def test_estimator_cross_target_ordering(trained_impulse):
+    """Float inference: M4 (FPU) beats M0+ (soft float) — Table 2 shape."""
+    m4 = est.estimate_impulse(trained_impulse, "nano33ble", int8=False)
+    m0 = est.estimate_impulse(trained_impulse, "rp2040", int8=False)
+    assert m4.nn_latency_ms < m0.nn_latency_ms
+
+
+def test_eon_compiler_roundtrip(trained_impulse):
+    art = compile_impulse(trained_impulse, batch_size=1)
+    fn = art.rehydrate()
+    x = np.asarray(keyword_audio(n_per_class=1, n_classes=1,
+                                 n_samples=N_SAMPLES)[0].data)[None]
+    np.testing.assert_allclose(np.asarray(fn(x)),
+                               np.asarray(trained_impulse.logits(x)),
+                               atol=1e-4)
+    assert art.artifact_bytes > 0
+
+
+def test_eon_tuner_screen_respects_constraints(kws_data):
+    tuner = EONTuner(input_samples=N_SAMPLES, n_classes=3,
+                     target="nano33ble", max_ram_kb=64, max_flash_kb=256)
+    cands = tuner.sample(8)
+    survivors = tuner.screen(cands)
+    for c in survivors:
+        assert c.estimate.ram_kb <= 64
+        assert c.estimate.flash_kb <= 256
+    assert all(c.estimate is not None for c in cands)
+
+
+def test_calibration_pareto_front():
+    scores, spans = event_stream(n_windows=6000, n_events=25, seed=3)
+    front = cal.calibrate(scores, spans, generations=6, population=16)
+    assert front
+    fars = [p["far_per_hour"] for p in front]
+    frrs = [p["frr"] for p in front]
+    # pareto: sorted by FAR ascending, FRR must be strictly descending-ish
+    assert fars == sorted(fars)
+    assert all(frrs[i] >= frrs[i + 1] for i in range(len(frrs) - 1))
+    # a sane config catches most events at low FAR somewhere on the front
+    assert min(frrs) <= 0.2
+
+
+def test_calibration_threshold_monotonicity():
+    """Property: raising the threshold cannot raise FAR."""
+    scores, spans = event_stream(n_windows=4000, n_events=15, seed=1)
+    fars = []
+    for th in (0.3, 0.5, 0.7, 0.9):
+        cfg = cal.PostProcessConfig(3, th, 5)
+        far, _ = cal.far_frr(scores, spans, cfg, windows_per_hour=3600)
+        fars.append(far)
+    assert all(fars[i] >= fars[i + 1] for i in range(len(fars) - 1))
+
+
+def test_active_learning_labels_clusters():
+    rng = np.random.RandomState(0)
+    n_per, d, classes = 60, 16, 3
+    centers = rng.randn(classes, d) * 6
+    xs = np.concatenate([centers[c] + rng.randn(n_per, d)
+                         for c in range(classes)])
+    ys = np.repeat(np.arange(classes), n_per)
+    labeled_idx = np.concatenate([np.where(ys == c)[0][:8]
+                                  for c in range(classes)])
+    out = active_learning_round(lambda x: x, xs, labeled_idx, ys, classes)
+    prop, conf = out["proposed"], out["confident"]
+    mask = conf & (prop >= 0)
+    acc = (prop[mask] == ys[mask]).mean()
+    assert acc >= 0.95, acc
+    assert mask.mean() > 0.5          # labels most of the pool
+    assert out["projection"].shape == (len(xs), 2)

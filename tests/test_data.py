@@ -1,0 +1,111 @@
+"""Data substrate: ingestion, versioned dataset invariants, pipeline."""
+import io
+import json
+import wave
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import ingest
+from repro.data.dataset import Dataset, Sample, split_of
+from repro.data.pipeline import BatchPipeline, Prefetcher
+from repro.data.synthetic import keyword_audio, token_stream
+
+
+def test_ingest_csv():
+    s = ingest.ingest_csv(b"1.0,2.0\n3.0,4.0\n", label=1)
+    assert s.data.shape == (2, 2)
+    assert s.label == 1
+
+
+def test_ingest_json():
+    payload = json.dumps({"values": [0.1, 0.2, 0.3], "label": 2,
+                          "device": "nano"}).encode()
+    s = ingest.ingest_json(payload)
+    assert s.label == 2
+    assert s.metadata["device"] == "nano"
+    np.testing.assert_allclose(s.data, [0.1, 0.2, 0.3], atol=1e-6)
+
+
+def test_ingest_wav_roundtrip():
+    sig = (np.sin(np.linspace(0, 40, 1600)) * 2 ** 14).astype(np.int16)
+    buf = io.BytesIO()
+    with wave.open(buf, "wb") as w:
+        w.setnchannels(1)
+        w.setsampwidth(2)
+        w.setframerate(16000)
+        w.writeframes(sig.tobytes())
+    s = ingest.ingest_wav(buf.getvalue(), label=0)
+    assert s.metadata["sample_rate"] == 16000
+    assert abs(s.data.max() - sig.max() / 2 ** 15) < 1e-3
+
+
+def test_dataset_versioning(tmp_path):
+    ds = Dataset(tmp_path)
+    samples = keyword_audio(n_per_class=4, n_classes=2, n_samples=800)
+    ds.add_many(samples)
+    v1 = ds.commit("initial")
+    removed = next(iter(ds.samples))
+    ds.remove(removed)
+    v2 = ds.commit("removed one")
+    assert v1 != v2
+    old = ds.checkout(v1)
+    assert len(old) == len(samples)
+    assert removed in old.samples
+    new = ds.checkout(v2)
+    assert removed not in new.samples
+
+
+def test_split_stability_under_additions():
+    """Adding samples never moves existing samples across splits."""
+    samples = keyword_audio(n_per_class=10, n_classes=2, n_samples=500,
+                            seed=0)
+    before = {s.sample_id: split_of(s.sample_id) for s in samples}
+    more = keyword_audio(n_per_class=10, n_classes=2, n_samples=500, seed=9)
+    after = {s.sample_id: split_of(s.sample_id)
+             for s in samples + more}
+    for sid, sp in before.items():
+        assert after[sid] == sp
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.binary(min_size=8, max_size=64))
+def test_split_of_deterministic_and_partitioned(blob):
+    import hashlib
+    sid = hashlib.sha1(blob).hexdigest()
+    s1, s2 = split_of(sid), split_of(sid)
+    assert s1 == s2
+    assert s1 in ("train", "val", "test")
+
+
+def test_pipeline_host_sharding():
+    xs = np.arange(64)[:, None].astype(np.float32)
+    ys = np.arange(64).astype(np.int32)
+    got = []
+    for host in range(4):
+        p = BatchPipeline({"x": xs, "y": ys}, batch_size=16, shuffle=True,
+                          seed=3, host_index=host, host_count=4)
+        got.append([b["y"] for b in p.epoch(0)])
+    # same step across hosts covers disjoint quarters of the same batch
+    for step in range(len(got[0])):
+        union = np.concatenate([got[h][step] for h in range(4)])
+        assert len(set(union.tolist())) == 16
+
+
+def test_prefetcher_preserves_order():
+    it = iter([{"i": i} for i in range(10)])
+    out = [b["i"] for b in Prefetcher(it, depth=3)]
+    assert out == list(range(10))
+
+
+def test_token_stream_is_learnable_structure():
+    toks = token_stream(20000, 64, seed=0)
+    # bigram structure: top-4 successors should cover most transitions
+    from collections import Counter
+    succ = {}
+    for a, b in zip(toks[:-1], toks[1:]):
+        succ.setdefault(int(a), Counter())[int(b)] += 1
+    cover = np.mean([sum(c for _, c in cnt.most_common(4)) / sum(cnt.values())
+                     for cnt in succ.values()])
+    assert cover > 0.6, cover

@@ -1,0 +1,92 @@
+"""DSP blocks + serving-side cache arithmetic."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.dsp import filterbank as fb
+from repro.dsp.blocks import (MFCCBlock, MFEBlock, RawBlock,
+                              SpectrogramBlock, frame_signal)
+from repro.serve.kvcache import kv_cache_bytes
+
+
+def test_frame_signal_shapes_and_content():
+    x = jnp.arange(100, dtype=jnp.float32)[None]
+    frames = frame_signal(x, frame_len=20, stride=10)
+    assert frames.shape == (1, 9, 20)
+    np.testing.assert_allclose(frames[0, 0], np.arange(20))
+    np.testing.assert_allclose(frames[0, 1], np.arange(10, 30))
+
+
+@pytest.mark.parametrize("block_cls,kw", [
+    (MFEBlock, {"n_mels": 32}),
+    (MFCCBlock, {"n_mels": 32, "n_coeffs": 10}),
+    (SpectrogramBlock, {"n_fft": 256}),
+])
+def test_feature_shape_matches_output(block_cls, kw):
+    blk = block_cls(**kw)
+    n = 4000
+    x = jnp.asarray(np.random.RandomState(0).randn(2, n), jnp.float32)
+    out = blk(x)
+    assert out.shape[1:] == blk.feature_shape(n)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_mfe_separates_frequencies():
+    """A low tone and a high tone must land in different mel bins."""
+    sr = 16000
+    t = np.arange(sr) / sr
+    lo = jnp.asarray(np.sin(2 * np.pi * 200 * t), jnp.float32)[None]
+    hi = jnp.asarray(np.sin(2 * np.pi * 4000 * t), jnp.float32)[None]
+    blk = MFEBlock(n_mels=40)
+    e_lo = np.asarray(blk(lo)).mean(axis=1)[0]
+    e_hi = np.asarray(blk(hi)).mean(axis=1)[0]
+    assert e_lo.argmax() < e_hi.argmax()
+
+
+def test_raw_block_normalizes():
+    x = jnp.asarray(np.random.RandomState(0).randn(3, 500) * 7 + 3,
+                    jnp.float32)
+    out = np.asarray(RawBlock()(x))
+    np.testing.assert_allclose(out.mean(axis=-1), 0, atol=1e-3)
+    np.testing.assert_allclose(out.std(axis=-1), 1, atol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(16, 48), st.integers(4, 12))
+def test_mel_filterbank_partition(n_mels, seed):
+    """Filters are non-negative and every filter has support."""
+    m = fb.mel_filterbank(257, n_mels, 16000)
+    assert (m >= 0).all()
+    assert (m.sum(axis=0) > 0).all()
+
+
+def test_dct_orthonormal():
+    d = fb.dct_matrix(40, 40)
+    np.testing.assert_allclose(d.T @ d, np.eye(40), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# kv cache arithmetic (serving substrate)
+# ---------------------------------------------------------------------------
+def test_kv_cache_bytes_orderings():
+    dense = configs.get("internlm2-1.8b")
+    ssm = configs.get("falcon-mamba-7b")
+    swa = configs.get("gemma3-4b")
+    b, s = 8, 32768
+    # SSM cache is O(1) in seq; dense is O(S)
+    assert kv_cache_bytes(ssm, b, s) == kv_cache_bytes(ssm, b, 2 * s)
+    assert kv_cache_bytes(dense, b, 2 * s) > 1.9 * kv_cache_bytes(dense, b, s)
+    # sliding-window arch caches far less than a dense arch of its size
+    dense_like = swa.replace(sliding_window=0, local_global_ratio=0)
+    assert kv_cache_bytes(swa, b, s) < 0.5 * kv_cache_bytes(dense_like, b, s)
+
+
+def test_kv_cache_bytes_matches_dryrun_scale():
+    """qwen2 decode_32k: analytic cache ~= the dry-run argument bytes."""
+    cfg = configs.get("qwen2-vl-72b")
+    total = kv_cache_bytes(cfg, 128, 32768)
+    per_dev = total / 256
+    # dry-run measured ~5.0 GiB/device of cache arguments
+    assert 3 * 2**30 < per_dev < 8 * 2**30

@@ -1,0 +1,89 @@
+"""Project API façade (paper §4.9) + custom-block extensibility."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.blocks import (make_dsp_block, make_learn_block,
+                               register_dsp_block, register_learn_block)
+from repro.core.project import Project
+from repro.data.synthetic import keyword_audio
+
+N = 4000
+
+
+def test_project_full_workflow(tmp_path):
+    p = Project("kws", tmp_path)
+    v = p.ingest(keyword_audio(n_per_class=24, n_classes=3, n_samples=N))
+    assert len(p.dataset.versions()) == 1
+    p.set_impulse("mfcc", {"n_mels": 32, "n_coeffs": 10},
+                  "conv1d-stack", {"n_blocks": 2, "ch_first": 16,
+                                   "ch_last": 32})
+    p.train(epochs=8)
+    res = p.test()
+    assert res["accuracy"] >= 0.6
+    meta = p.quantize()
+    assert meta["compression"] > 2
+    e = p.estimate("nano33ble")
+    assert e.fits
+    art = p.deploy(tmp_path / "deploy.bin", int8=True)
+    assert (tmp_path / "deploy.bin").exists()
+    assert art.artifact_bytes > 0
+    stages = p.summary()["stages_run"]
+    for s in ("ingest", "set_impulse", "train", "test", "quantize",
+              "estimate", "deploy"):
+        assert s in stages
+    # the log is persisted (API-driven automation record)
+    assert (tmp_path / "project_log.json").exists()
+
+
+def test_custom_dsp_block_registration():
+    @dataclasses.dataclass(frozen=True)
+    class DecimateBlock:
+        factor: int = 4
+        name: str = "decimate"
+
+        def feature_shape(self, n):
+            return (n // self.factor,)
+
+        def __call__(self, x):
+            return x[..., ::self.factor]
+
+        def hyperparams(self):
+            return {"factor": self.factor}
+
+    register_dsp_block("decimate", DecimateBlock)
+    blk = make_dsp_block("decimate", factor=2)
+    x = jnp.arange(16, dtype=jnp.float32)[None]
+    out = blk.apply(x)
+    assert out.shape == (1, 8)
+    assert blk.feature_shape(16) == (8,)
+
+
+def test_custom_learn_block_registration():
+    @dataclasses.dataclass(frozen=True)
+    class LinearCfg:
+        n_classes: int = 3
+        name: str = "linear"
+
+    def init(cfg, key, input_shape):
+        din = int(np.prod(input_shape))
+        return {"w": jax.random.normal(key, (din, cfg.n_classes)) * 0.01}
+
+    def apply(cfg, params, feats):
+        return feats.reshape(feats.shape[0], -1) @ params["w"]
+
+    register_learn_block("linear", LinearCfg, init, apply)
+    blk = make_learn_block("linear", n_classes=3)
+    params = blk.init(jax.random.key(0), (10, 4))
+    logits = blk.apply(params, jnp.ones((2, 10, 4)))
+    assert logits.shape == (2, 3)
+
+
+def test_unknown_block_raises():
+    with pytest.raises(ValueError, match="unknown dsp block"):
+        make_dsp_block("nope")
+    with pytest.raises(ValueError, match="unknown learn block"):
+        make_learn_block("nope")
