@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# End-to-end smoke: the paper's quickstart loop + the serving benchmark
+# in tiny mode. Finishes in a few minutes on CPU.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== quickstart (impulse train -> quantize -> estimate -> compile) ==="
+python examples/quickstart.py
+
+echo
+echo "=== serve bench (static vs continuous batching, tiny) ==="
+python benchmarks/serve_bench.py --tiny

@@ -22,6 +22,15 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import export as jax_export
+
+
+def normalize_cost_analysis(cost) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` returns a dict on some jax versions
+    and a per-device list of dicts on others; normalize to one dict."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return cost or {}
 
 
 @dataclasses.dataclass
@@ -48,7 +57,7 @@ class CompiledArtifact:
 
     def rehydrate(self) -> Callable:
         """Deserialize into a callable that never re-traces."""
-        exported = jax.export.deserialize(self.serialized)
+        exported = jax_export.deserialize(self.serialized)
         return jax.jit(exported.call)
 
 
@@ -57,12 +66,12 @@ def compile_fn(fn: Callable, *abstract_args, name: str = "fn",
     """AOT lower + compile + serialize ``fn(*args)``."""
     t0 = time.time()
     jfn = jax.jit(fn)
-    exported = jax.export.export(jfn)(*abstract_args)
+    exported = jax_export.export(jfn)(*abstract_args)
     blob = exported.serialize()
     lowered = jfn.lower(*abstract_args)
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     dt = time.time() - t0
     return CompiledArtifact(
         name=name, serialized=blob, input_specs=abstract_args,
@@ -98,6 +107,29 @@ def compile_impulse(impulse, batch_size: int = 1,
     return compile_fn(deploy, raw,
                       name=f"{impulse.dsp.name}+{impulse.learn.name}"
                            f"{'+int8' if int8 else ''}")
+
+
+def compile_serve_decode(cfg, params, *, slots: int, capacity: int,
+                         rules=None, mesh=None) -> CompiledArtifact:
+    """Serve-from-artifact hook (paper C4, end-to-end): AOT-compile the
+    continuous-batching decode step into a ``CompiledArtifact`` so the
+    server's hot loop runs the same kind of serialized executable we
+    "deploy" — zero Python tracing per token.
+
+    ``slots`` is the engine's decode batch (slot count), ``capacity`` the
+    per-slot KV row length (max bucket + max generation budget).
+    """
+    from repro.serve.kvcache import abstract_decode_cache
+    from repro.serve.serve_step import make_slot_decode_step
+
+    step = make_slot_decode_step(cfg, rules=rules, mesh=mesh)
+    params_abs = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype),
+        params)
+    cache_abs = abstract_decode_cache(cfg, slots, capacity)
+    vec = jax.ShapeDtypeStruct((slots,), jnp.int32)
+    return compile_fn(step, params_abs, cache_abs, vec, vec, vec,
+                      name=f"{cfg.name}-decode-b{slots}-s{capacity}")
 
 
 def measure_dispatch_overhead(fn: Callable, *args, iters: int = 20

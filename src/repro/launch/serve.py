@@ -1,7 +1,10 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id>``.
 
-Runs the batch server over synthetic prompts on the selected arch
-(smoke config on CPU; same code takes the full config on a pod).
+Runs the continuous-batching server over synthetic prompts on the
+selected arch (smoke config on CPU; same code takes the full config on
+a pod).  ``--engine static`` selects the static-batching baseline,
+``--artifact`` runs the decode hot loop from an AOT ``CompiledArtifact``
+(paper C4: serve the deployed executable).
 """
 from __future__ import annotations
 
@@ -13,24 +16,34 @@ import numpy as np
 
 from repro import configs
 from repro.models.params import init_params
-from repro.serve.server import BatchServer
+from repro.serve.server import ContinuousBatchServer, StaticBatchServer
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--engine", choices=("continuous", "static"),
+                    default="continuous")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--artifact", action="store_true",
+                    help="decode via AOT CompiledArtifact (EON-style)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch) if args.full else configs.get_smoke(args.arch)
     params = init_params(cfg, jax.random.key(0))
-    server = BatchServer(cfg, params, batch_size=args.batch,
-                         prompt_len=args.prompt_len,
-                         max_new_tokens=args.max_new)
+    if args.engine == "static":
+        server = StaticBatchServer(cfg, params, batch_size=args.slots,
+                                   prompt_len=args.prompt_len,
+                                   max_new_tokens=args.max_new)
+    else:
+        server = ContinuousBatchServer(
+            cfg, params, slots=args.slots,
+            buckets=(args.prompt_len // 2, args.prompt_len),
+            max_new_tokens=args.max_new, use_artifact=args.artifact)
     rng = np.random.RandomState(0)
     prompts = [rng.randint(0, cfg.vocab_size, size=args.prompt_len)
                .astype(np.int32) for _ in range(args.requests)]

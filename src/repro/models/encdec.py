@@ -115,15 +115,16 @@ def forward_prefill(cfg: ArchConfig, params, inputs: Dict[str, jax.Array]):
 
 
 def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
-                   position: jax.Array):
+                   position: jax.Array, write_idx=None):
     params = maybe_cast_params(params, cfg)
     x = embed_tokens(params, token[:, None], cfg)
+    widx = position if write_idx is None else write_idx
 
     def body(h, pc):
         p, ck, cv, xk, xv = pc
         hh = rms_norm(p["attn_norm"], h, cfg.norm_eps)
         attn_out, ck, cv, _ = attention_decode_layer(
-            p["attn"], hh, position, ck, cv, cache["full_pos"], position,
+            p["attn"], hh, position, ck, cv, cache["full_pos"], widx,
             **_attn_kwargs(cfg))
         h = h + attn_out
         hh = rms_norm(p["xattn_norm"], h, cfg.norm_eps)
@@ -143,5 +144,5 @@ def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
     new_cache = dict(cache, k=ks, v=vs)
     new_cache["full_pos"] = jax.vmap(
         lambda cp, pv, i: lax.dynamic_update_slice_in_dim(cp, pv[None], i, 0)
-    )(cache["full_pos"], position, position)
+    )(cache["full_pos"], position, widx)
     return logits, new_cache

@@ -134,14 +134,16 @@ def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
     positions are (B, S) absolute indices (mask is position-based so the
     same code serves packed/shifted sequences and cache decoding).
+    Negative key positions mark invalid entries (left-pad tokens in a
+    serving bucket) and are never attended.
     """
     scale = q.shape[-1] ** -0.5
     scores = _gqa_scores(q * scale, k)                       # (B,Hq,Sq,Sk) f32
-    mask = jnp.ones(scores.shape[-2:], dtype=bool)
     qp = q_positions[:, None, :, None]
     kp = k_positions[:, None, None, :]
+    mask = kp >= 0
     if causal:
-        mask = kp <= qp
+        mask = jnp.logical_and(mask, kp <= qp)
     if window > 0:
         mask = jnp.logical_and(mask, kp > qp - window)
     scores = jnp.where(mask, scores, NEG_INF)
@@ -177,11 +179,11 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         acc, m, l = carry
         kc, vc, kpc = inputs                                   # chunk leaves
         s = _gqa_scores(qs, kc)                                # (B,Hq,Sq,C)
-        mask = jnp.ones(s.shape[-2:], dtype=bool)
         qp = q_positions[:, None, :, None]
         kp = kpc[:, None, None, :]
+        mask = kp >= 0
         if causal:
-            mask = kp <= qp
+            mask = jnp.logical_and(mask, kp <= qp)
         s = jnp.where(mask, s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
         alpha = jnp.exp(m - m_new)
@@ -239,6 +241,7 @@ def local_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                         preferred_element_type=jnp.float32)
     mask = (kpb[:, :, None, None, :] <= qp[:, :, None, :, None])
     mask &= (kpb[:, :, None, None, :] > qp[:, :, None, :, None] - window)
+    mask &= (kpb[:, :, None, None, :] >= 0)
     scores = jnp.where(mask, scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     o = jnp.einsum("bnhqk,bnkhd->bnqhd", p.astype(vb.dtype), vb)

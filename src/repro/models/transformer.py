@@ -405,13 +405,20 @@ def forward_prefill(cfg: ArchConfig, params, inputs: Dict[str, jax.Array]):
 
 
 def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
-                   position: jax.Array):
-    """token: (B,) int32; position: (B,) absolute index of this token."""
+                   position: jax.Array, write_idx: Optional[jax.Array] = None):
+    """token: (B,) int32; position: (B,) absolute index of this token.
+
+    ``write_idx`` (B,) is the cache slot row index to write KV into; it
+    defaults to ``position`` (contiguous cache), but the serving engine
+    passes it separately because a left-padded prefill bucket leaves the
+    cache index ≠ absolute position.  Attention validity is always
+    decided by stored positions, never by slot index.
+    """
     params = maybe_cast_params(params, cfg)
     x = embed_tokens(params, token[:, None], cfg)
     w = cfg.sliding_window
-    write_full = position
-    write_local = position % w if w else position
+    write_full = position if write_idx is None else write_idx
+    write_local = position % w if w else write_full
     x, new_cache = trunk_decode(cfg, params, x, position, cache,
                                 write_full=write_full,
                                 write_local=write_local)
@@ -435,18 +442,39 @@ def _write_pos(pos_arr, position, idx):
 # ---------------------------------------------------------------------------
 # Cache construction
 # ---------------------------------------------------------------------------
-def _ring_from_prefill(k: jax.Array, positions: jax.Array, w: int):
-    """Take the last w timesteps of (.., B, S, kv, hd) and place them into
-    ring slots (pos mod w).  Leading stacked dims are preserved."""
-    s = k.shape[-3]
-    if s <= w:
-        pad = [(0, 0)] * (k.ndim - 3) + [(0, w - s), (0, 0), (0, 0)]
-        return jnp.pad(k, pad)
-    last = k[..., s - w:, :, :]
-    slots = (positions[0, s - w:] if positions.ndim == 2
-             else positions[0, s - w:, 0]) % w
-    out = jnp.zeros(k.shape[:-3] + (w,) + k.shape[-2:], k.dtype)
-    return out.at[..., slots, :, :].set(last)
+def _ring_select(pos1d: jax.Array, w: int):
+    """Per-row ring placement for sliding-window caches.
+
+    pos1d: (B, S) absolute positions, −1 marking invalid (left-pad)
+    entries.  The ring keeps, per row, the w most-recent *real* entries
+    at slot ``pos % w``.  Returns (src, has, local_pos): source index
+    into S per ring slot, slot validity, and the stored position per
+    slot (−1 when empty) — per-row, so left-padded serving buckets with
+    different pad widths per sequence stay correct.
+    """
+    max_pos = jnp.max(pos1d, axis=1, keepdims=True)            # (B, 1)
+    keep = (pos1d >= 0) & (pos1d > max_pos - w)                # (B, S)
+    slot_of = jnp.where(keep, pos1d % w, w)                    # w = "none"
+    slot_ids = jnp.arange(w, dtype=pos1d.dtype)[None, :, None]
+    match = slot_of[:, None, :] == slot_ids                    # (B, w, S)
+    src = jnp.argmax(match, axis=-1)                           # (B, w)
+    has = jnp.any(match, axis=-1)                              # (B, w)
+    local_pos = jnp.where(has, jnp.take_along_axis(pos1d, src, axis=1),
+                          -1).astype(jnp.int32)
+    return src, has, local_pos
+
+
+def _ring_from_prefill(k: jax.Array, src: jax.Array, has: jax.Array):
+    """Gather (.., B, S, kv, hd) into ring layout (.., B, w, kv, hd)
+    according to ``_ring_select``'s placement.  Leading stacked dims are
+    preserved; empty slots are zeroed (masked by local_pos == −1)."""
+    b, w = src.shape
+    shape_idx = (1,) * (k.ndim - 4) + (b, w, 1, 1)
+    idx = jnp.broadcast_to(src.reshape(shape_idx),
+                           k.shape[:-3] + (w,) + k.shape[-2:])
+    out = jnp.take_along_axis(k, idx, axis=-3)
+    return jnp.where(jnp.broadcast_to(has.reshape(shape_idx), out.shape),
+                     out, jnp.zeros((), out.dtype))
 
 
 def _constrain_kv_cache(arr: jax.Array) -> jax.Array:
@@ -474,20 +502,16 @@ def _cache_from_prefill(cfg: ArchConfig, caches, positions, b, s):
     elif pat["kind"] == "uniform_ssm":
         cache["ssm"] = caches["ssm"]
     elif pat["kind"] == "local_global":
-        cache["local_k"] = _ring_from_prefill(caches["local_k"], positions, w)
-        cache["local_v"] = _ring_from_prefill(caches["local_v"], positions, w)
+        src, has, local_pos = _ring_select(pos1d, w)
+        cache["local_k"] = _ring_from_prefill(caches["local_k"], src, has)
+        cache["local_v"] = _ring_from_prefill(caches["local_v"], src, has)
         cache["global_k"], cache["global_v"] = (caches["global_k"],
                                                 caches["global_v"])
         if "tail_k" in caches:
-            cache["tail_k"] = _ring_from_prefill(caches["tail_k"], positions, w)
-            cache["tail_v"] = _ring_from_prefill(caches["tail_v"], positions, w)
+            cache["tail_k"] = _ring_from_prefill(caches["tail_k"], src, has)
+            cache["tail_v"] = _ring_from_prefill(caches["tail_v"], src, has)
         cache["full_pos"] = pos1d
-        last_w = jnp.arange(max(s - w, 0), max(s - w, 0) + w)
-        lp = jnp.where(last_w < s, last_w, -1).astype(jnp.int32)
-        # invalid entries keep their own slot so they never collide
-        slots = jnp.where(lp >= 0, lp % w, jnp.arange(w))
-        local_pos = jnp.full((w,), -1, jnp.int32).at[slots].set(lp)
-        cache["local_pos"] = jnp.broadcast_to(local_pos, (b, w))
+        cache["local_pos"] = local_pos
     elif pat["kind"] == "hybrid":
         cache["ssm"] = caches["ssm"]
         cache["attn_k"], cache["attn_v"] = caches["attn_k"], caches["attn_v"]

@@ -1,14 +1,33 @@
-"""KV-cache utilities (re-exported from the backbone + sizing helpers).
+"""KV-cache utilities: sizing arithmetic + the slot API the continuous-
+batching engine is built on.
 
 Cache construction lives with the model (transformer._cache_from_prefill)
 so layouts stay next to the attention code; this module adds the
-serving-side arithmetic the server and estimator need.
+serving-side pieces:
+
+* ``kv_cache_bytes``        — footprint arithmetic (estimator/server).
+* ``alloc_decode_cache``    — zero-filled slot-addressed decode cache of
+                              ``slots`` rows × ``capacity`` KV entries,
+                              position arrays initialised to -1 (invalid).
+* ``write_slot``            — splice one batch-1 prefill cache into a slot
+                              row (the admission path).
+* ``release_slot``          — invalidate a slot row's positions so stale
+                              KV can never be attended (the free path).
+* ``abstract_decode_cache`` — ShapeDtypeStructs of the above, for AOT
+                              export (eon_compiler.compile_serve_decode).
+
+Validity is decided *only* by stored positions (−1 = empty), so a slot
+row can be recycled between decode steps without touching the K/V bytes.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Any, Dict
 
-from repro.core.arch import ArchConfig
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.arch import ArchConfig, ShapeConfig
 from repro.models.transformer import grow_cache  # noqa: F401  (re-export)
 
 
@@ -40,3 +59,86 @@ def kv_cache_bytes(cfg: ArchConfig, batch: int, seq_len: int,
     if cfg.is_encdec:
         total += cfg.n_layers * per_layer_kv * (seq_len // cfg.enc_seq_divisor)
     return total
+
+
+# ---------------------------------------------------------------------------
+# Slot-addressed decode cache (continuous batching)
+# ---------------------------------------------------------------------------
+def _is_kv_key(key: str) -> bool:
+    return key.split("_")[-1] in ("k", "v")
+
+
+def abstract_decode_cache(cfg: ArchConfig, slots: int, capacity: int):
+    """ShapeDtypeStructs of a ``slots`` × ``capacity`` decode cache."""
+    from repro.models.api import abstract_cache
+    shape = ShapeConfig("serve_alloc", seq_len=capacity, global_batch=slots,
+                        kind="prefill")
+    return abstract_cache(cfg, shape)
+
+
+def alloc_decode_cache(cfg: ArchConfig, slots: int, capacity: int):
+    """Concrete all-empty decode cache: zeros, positions −1 (invalid)."""
+    abs_cache = abstract_decode_cache(cfg, slots, capacity)
+
+    def init(key_path, sds):
+        name = key_path[0].key if hasattr(key_path[0], "key") else None
+        if name is not None and name.endswith("_pos"):
+            return jnp.full(sds.shape, -1, sds.dtype)
+        return jnp.zeros(sds.shape, sds.dtype)
+
+    return jax.tree_util.tree_map_with_path(init, abs_cache)
+
+
+def _first_diff_axis(big_shape, small_shape) -> int:
+    """Axis where a batch-1 sub-cache differs from the full cache (the
+    batch axis — it always precedes any seq-length difference)."""
+    for i, (b, s) in enumerate(zip(big_shape, small_shape)):
+        if b != s:
+            return i
+    return -1  # identical shapes: slots == 1, write in place
+
+
+def _splice(big: jax.Array, small: jax.Array, slot, batch_axis: int):
+    starts = [0] * big.ndim
+    if batch_axis >= 0:
+        starts[batch_axis] = slot
+    return lax.dynamic_update_slice(big, small.astype(big.dtype),
+                                    tuple(starts))
+
+
+def write_slot(big_cache: Dict[str, Any], small_cache: Dict[str, Any],
+               slot) -> Dict[str, Any]:
+    """Splice a batch-1 prefill cache into row ``slot`` of the big cache.
+
+    K/V rows are written over indices ``[0, bucket)``; the position row is
+    fully rewritten (−1 beyond the bucket) so whatever the slot held
+    before — a finished request's KV, garbage writes from its idle steps —
+    is invalidated in one shot.  Jit this per prefill bucket shape.
+    """
+    out = dict(big_cache)
+    for key, big in big_cache.items():
+        small = small_cache[key]
+        if key.endswith("_pos"):
+            row = jnp.full((1, big.shape[1]), -1, big.dtype)
+            wiped = lax.dynamic_update_slice(big, row, (slot, 0))
+            out[key] = lax.dynamic_update_slice(
+                wiped, small.astype(big.dtype), (slot, 0))
+        elif _is_kv_key(key):
+            out[key] = _splice(big, small, slot, big.ndim - 4)
+        else:  # recurrent-state pytrees (ssm): batch axis inferred per leaf
+            out[key] = jax.tree.map(
+                lambda b, s: _splice(
+                    b, s, slot, _first_diff_axis(b.shape, s.shape)),
+                big, small)
+    return out
+
+
+def release_slot(big_cache: Dict[str, Any], slot) -> Dict[str, Any]:
+    """Invalidate a slot row: set its position entries to −1.  K/V bytes
+    stay in place — they are unreachable once no position marks them."""
+    out = dict(big_cache)
+    for key, big in big_cache.items():
+        if key.endswith("_pos"):
+            row = jnp.full((1, big.shape[1]), -1, big.dtype)
+            out[key] = lax.dynamic_update_slice(big, row, (slot, 0))
+    return out

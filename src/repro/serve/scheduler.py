@@ -1,0 +1,104 @@
+"""Slot scheduler for the continuous-batching engine (paper §4.6).
+
+The serving analogue of the EIM process runner's queue: requests wait in
+an FCFS queue; a fixed set of KV-cache *slots* (rows of the decode
+cache) is the unit of admission.  A slot's lifecycle is
+
+    FREE ──admit──▶ ACTIVE ──finish──▶ FREE
+          (prefill + write_slot)   (release_slot between decode steps)
+
+Slots are freed *between decode steps*, not at batch boundaries, so a
+short request never waits for the longest member of its batch — that is
+the whole difference between continuous and static batching.
+
+``BucketPolicy`` quantises prompt lengths to a small set of padded
+prefill shapes so each bucket compiles exactly once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Sequence, Tuple
+
+
+class BucketPolicy:
+    """Smallest-fitting padded prefill bucket; prompts longer than the
+    largest bucket are truncated (keep the most recent tokens)."""
+
+    def __init__(self, buckets: Sequence[int]):
+        assert buckets, "need at least one prefill bucket"
+        self.buckets: Tuple[int, ...] = tuple(sorted(set(int(b)
+                                                         for b in buckets)))
+
+    @property
+    def max_bucket(self) -> int:
+        return self.buckets[-1]
+
+    def bucket_for(self, prompt_len: int) -> int:
+        for b in self.buckets:
+            if prompt_len <= b:
+                return b
+        return self.max_bucket
+
+
+@dataclasses.dataclass
+class Slot:
+    """Host-side view of one decode-cache row."""
+    index: int
+    rid: Optional[int] = None      # request occupying the slot (None = free)
+    position: int = 0              # absolute position of the next token
+    write_idx: int = 0             # next free cache row index (≥ bucket)
+    generated: int = 0             # tokens emitted for this request
+    max_new: int = 0
+
+    @property
+    def free(self) -> bool:
+        return self.rid is None
+
+    def occupy(self, rid: int, prompt_len: int, bucket: int,
+               max_new: int) -> None:
+        self.rid = rid
+        self.position = prompt_len   # prefill emitted the token at len-1
+        self.write_idx = bucket
+        self.generated = 1           # prefill's greedy token counts
+        self.max_new = max_new
+
+    def advance(self) -> None:
+        self.position += 1
+        self.write_idx += 1
+        self.generated += 1
+
+    def release(self) -> None:
+        self.rid = None
+        self.generated = 0
+        self.max_new = 0
+
+
+class SlotScheduler:
+    """FCFS admission over a fixed slot set."""
+
+    def __init__(self, n_slots: int):
+        self.slots: List[Slot] = [Slot(i) for i in range(n_slots)]
+        self.waiting: Deque = deque()
+
+    def enqueue(self, req) -> None:
+        self.waiting.append(req)
+
+    def free_slots(self) -> List[Slot]:
+        return [s for s in self.slots if s.free]
+
+    def active_slots(self) -> List[Slot]:
+        return [s for s in self.slots if not s.free]
+
+    def admissions(self) -> List[Tuple[Slot, object]]:
+        """Pair waiting requests with free slots (drains either side)."""
+        out = []
+        for slot in self.free_slots():
+            if not self.waiting:
+                break
+            out.append((slot, self.waiting.popleft()))
+        return out
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.waiting) or any(not s.free for s in self.slots)

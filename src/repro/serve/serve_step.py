@@ -3,6 +3,11 @@
 ``decode_*`` shapes lower ``decode_step`` (one new token against a KV
 cache of seq_len), ``prefill_*`` shapes lower ``prefill_step`` — per the
 assignment's cell semantics.
+
+The decode step takes an explicit per-sequence ``write_idx`` so the
+continuous-batching engine can keep cache rows slot-addressed (index ≠
+absolute position once prompts are left-padded into buckets); plain
+callers pass ``write_idx == position``.
 """
 from __future__ import annotations
 
@@ -48,6 +53,20 @@ def make_decode_step(cfg: ArchConfig, *, rules: Optional[AxisRules] = None,
     def decode_step(params, cache, token, position):
         logits, new_cache = fns.forward_decode(cfg, params, cache, token,
                                                position)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, new_cache
+
+    return _context(decode_step, rules, mesh)
+
+
+def make_slot_decode_step(cfg: ArchConfig, *,
+                          rules: Optional[AxisRules] = None, mesh=None):
+    """Decode step with slot-addressed cache writes (continuous batching)."""
+    fns = model_fns(cfg)
+
+    def decode_step(params, cache, token, position, write_idx):
+        logits, new_cache = fns.forward_decode(cfg, params, cache, token,
+                                               position, write_idx)
         next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_token, logits, new_cache
 

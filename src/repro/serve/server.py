@@ -1,26 +1,40 @@
-"""Batched serving loop — the "EIM process runner" analogue (paper §4.6):
+"""Serving engines — the "EIM process runner" analogue (paper §4.6):
 a deployed artifact behind a queue-driven I/O interface.
 
-Requests join a waiting queue; the scheduler forms prefill batches
-(padded to the compiled bucket), then all active sequences advance
-through shared decode steps (continuous batching at step granularity:
-finished sequences free their slot for waiting requests between steps).
+Two schedulers over the same model serve steps:
+
+* ``ContinuousBatchServer`` (the default ``BatchServer``) — slot-based
+  continuous batching.  Finished sequences release their KV-cache slot
+  *between decode steps* and waiting requests are admitted into freed
+  slots; per-request ``max_new_tokens`` is honored in-step.  Prefill is
+  compiled once per padded bucket; optionally the decode hot loop runs a
+  ``CompiledArtifact`` (``core/eon_compiler.compile_serve_decode``) so
+  serving executes the same AOT executable we "deploy" (paper C4).
+* ``StaticBatchServer`` — the classic baseline: a batch is formed once
+  and decodes until its slowest member finishes; short requests block
+  behind long ones.  Kept as the benchmark control.
+
+Both left-pad prompts into the prefill bucket with position −1 marking
+pad entries, which the attention masks treat as never-attendable, so
+batched serving is token-exact versus an unpadded single-request decode
+for attention architectures.  (SSM/hybrid recurrences still traverse pad
+inputs — see docs/serving.md for the caveat.)
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arch import ArchConfig
-from repro.models import api
-from repro.models.transformer import grow_cache
-from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.serve.kvcache import (alloc_decode_cache, grow_cache,
+                                 release_slot, write_slot)
+from repro.serve.scheduler import BucketPolicy, SlotScheduler
+from repro.serve.serve_step import make_prefill_step, make_slot_decode_step
 
 
 @dataclasses.dataclass
@@ -33,64 +47,281 @@ class Request:
     done: bool = False
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
+    admitted_step: Optional[int] = None   # decode-step clock at admission
+    finished_step: Optional[int] = None
 
 
-class BatchServer:
-    """Greedy-decoding batch server over the framework's serve steps."""
+def _check_supported(cfg: ArchConfig) -> None:
+    if cfg.is_encdec or cfg.frontend:
+        raise NotImplementedError(
+            f"{cfg.name}: serving engine requires a token-input decoder-only"
+            " architecture (enc-dec / embedding-frontend archs need a"
+            " modality runner in front)")
 
-    def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 4,
-                 prompt_len: int = 32, max_new_tokens: int = 16):
+
+def _left_pad(prompt: np.ndarray, bucket: int):
+    """Pad/truncate into the bucket.  Returns (tokens, positions); pad
+    entries get position −1, which every attention mask rejects."""
+    p = np.asarray(prompt, np.int32)[-bucket:]
+    tokens = np.zeros((bucket,), np.int32)
+    positions = np.full((bucket,), -1, np.int32)
+    if len(p):
+        tokens[-len(p):] = p
+        positions[-len(p):] = np.arange(len(p), dtype=np.int32)
+    return tokens, positions, len(p)
+
+
+def _summarize(served: List[Request], wall: float, *, engine: str,
+               decode_steps: int, prefills: int,
+               occupancy: Optional[List[int]] = None,
+               n_slots: int = 0) -> Dict[str, float]:
+    ttfts = np.array([r.first_token_at - r.submitted_at for r in served])
+    gen = sum(len(r.tokens) for r in served)
+    m: Dict[str, float] = {
+        "engine": engine,
+        "requests": len(served),
+        "wall_s": wall,
+        "ttft_mean_s": float(ttfts.mean()) if len(ttfts) else 0.0,
+        "ttft_p50_s": float(np.percentile(ttfts, 50)) if len(ttfts) else 0.0,
+        "ttft_p95_s": float(np.percentile(ttfts, 95)) if len(ttfts) else 0.0,
+        "tokens_generated": gen,
+        "tokens_per_s": gen / max(wall, 1e-9),
+        "decode_steps": decode_steps,
+        "prefills": prefills,
+    }
+    if occupancy and n_slots:
+        m["mean_active_slots"] = float(np.mean(occupancy))
+        m["slot_utilization"] = float(np.mean(occupancy)) / n_slots
+    return m
+
+
+class _ServerBase:
+    def __init__(self, cfg: ArchConfig, params):
+        _check_supported(cfg)
         self.cfg = cfg
         self.params = params
-        self.batch_size = batch_size
-        self.prompt_len = prompt_len
-        self.max_new = max_new_tokens
-        self.prefill = jax.jit(make_prefill_step(cfg))
-        self.decode = jax.jit(make_decode_step(cfg))
-        self.queue: deque[Request] = deque()
+        self._next_rid = 0
+        self.requests: Dict[int, Request] = {}
         self.metrics: Dict[str, float] = {}
 
-    def submit(self, prompts: List[np.ndarray],
-               max_new_tokens: Optional[int] = None) -> List[Request]:
+    def _make_requests(self, prompts: List[np.ndarray],
+                       max_new_tokens) -> List[Request]:
+        if max_new_tokens is None:
+            max_new_tokens = self.max_new
+        if isinstance(max_new_tokens, int):
+            max_new_tokens = [max_new_tokens] * len(prompts)
+        assert len(max_new_tokens) == len(prompts)
+        now = time.perf_counter()
         reqs = []
-        for i, p in enumerate(prompts):
-            r = Request(rid=len(self.queue) + i, prompt=p,
-                        max_new_tokens=max_new_tokens or self.max_new,
-                        submitted_at=time.perf_counter())
-            self.queue.append(r)
+        for p, mn in zip(prompts, max_new_tokens):
+            r = Request(rid=self._next_rid, prompt=np.asarray(p, np.int32),
+                        max_new_tokens=max(1, min(int(mn), self.max_new_cap)),
+                        submitted_at=now)
+            self._next_rid += 1
+            self.requests[r.rid] = r
             reqs.append(r)
         return reqs
 
-    def _pad_batch(self, reqs: List[Request]) -> np.ndarray:
-        out = np.zeros((self.batch_size, self.prompt_len), np.int32)
-        for i, r in enumerate(reqs):
-            p = r.prompt[-self.prompt_len:]
-            out[i, -len(p):] = p       # left-pad into the fixed bucket
-        return out
+
+class ContinuousBatchServer(_ServerBase):
+    """Continuous batching: slot recycling between decode steps.
+
+    ``slots`` decode rows share one jitted decode step; prompts prefill
+    one at a time into the smallest padded bucket (one compilation per
+    bucket) and are spliced into a free slot row.  ``batch_size`` /
+    ``prompt_len`` are accepted as aliases so existing callers keep
+    working.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *,
+                 slots: Optional[int] = None,
+                 buckets: Optional[Sequence[int]] = None,
+                 max_new_tokens: int = 16,
+                 max_new_cap: Optional[int] = None,
+                 eos_id: Optional[int] = None,
+                 use_artifact: bool = False,
+                 batch_size: Optional[int] = None,
+                 prompt_len: Optional[int] = None):
+        super().__init__(cfg, params)
+        self.n_slots = int(slots or batch_size or 4)
+        self.policy = BucketPolicy(buckets or (prompt_len or 32,))
+        self.max_new = int(max_new_tokens)
+        self.max_new_cap = int(max_new_cap or max(self.max_new, 1))
+        self.capacity = self.policy.max_bucket + self.max_new_cap
+        self.eos_id = eos_id
+        self.sched = SlotScheduler(self.n_slots)
+        self.prefill = jax.jit(make_prefill_step(cfg))
+        # the cache is dead after every call (immediately reassigned):
+        # donate it so steps update rows in place instead of copying the
+        # whole KV allocation per token
+        self._write = jax.jit(write_slot, donate_argnums=(0,))
+        self._release = jax.jit(release_slot, donate_argnums=(0,))
+        self.artifact = None
+        if use_artifact:
+            from repro.core.eon_compiler import compile_serve_decode
+            self.artifact = compile_serve_decode(
+                cfg, params, slots=self.n_slots, capacity=self.capacity)
+            self.decode = self.artifact.rehydrate()
+        else:
+            self.decode = jax.jit(make_slot_decode_step(cfg),
+                                  donate_argnums=(1,))
+        self.cache = alloc_decode_cache(cfg, self.n_slots, self.capacity)
+        # host mirror of the last emitted token per slot (decode feed)
+        self._cur = np.zeros((self.n_slots,), np.int32)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompts: List[np.ndarray],
+               max_new_tokens: Union[int, Sequence[int], None] = None
+               ) -> List[Request]:
+        reqs = self._make_requests(prompts, max_new_tokens)
+        for r in reqs:
+            self.sched.enqueue(r)
+        return reqs
+
+    # ------------------------------------------------------------------
+    def _admit(self, slot, req: Request, step_clock: int) -> bool:
+        """Prefill into the smallest bucket and splice into the slot.
+        Returns True when the request keeps the slot (needs decoding)."""
+        bucket = self.policy.bucket_for(len(req.prompt))
+        tokens, positions, plen = _left_pad(req.prompt, bucket)
+        inputs = {"tokens": jnp.asarray(tokens[None, :]),
+                  "positions": jnp.asarray(positions[None, :])}
+        next_tok, _, small = self.prefill(self.params, inputs)
+        tok0 = int(np.asarray(next_tok)[0])
+        req.tokens.append(tok0)
+        req.first_token_at = time.perf_counter()
+        req.admitted_step = step_clock
+        if req.max_new_tokens <= 1 or tok0 == self.eos_id:
+            self._finish(req, step_clock)
+            return False
+        self.cache = self._write(self.cache, small, slot.index)
+        slot.occupy(req.rid, plen, bucket, req.max_new_tokens)
+        self._cur[slot.index] = tok0
+        return True
+
+    def _finish(self, req: Request, step_clock: int) -> None:
+        req.done = True
+        req.finished_at = time.perf_counter()
+        req.finished_step = step_clock
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict[str, float]:
+        """Serve until queue and slots drain; returns latency metrics."""
+        t0 = time.perf_counter()
+        served: List[Request] = []
+        decode_steps = 0
+        prefills = 0
+        occupancy: List[int] = []
+
+        while self.sched.busy:
+            # Admission: freed slots pick up waiting requests *now*, not
+            # at the end of a batch — the continuous-batching invariant.
+            for slot, req in self.sched.admissions():
+                prefills += 1
+                if not self._admit(slot, req, decode_steps):
+                    served.append(req)
+            active = self.sched.active_slots()
+            if not active:
+                continue
+
+            tok = np.array(self._cur)
+            pos = np.zeros((self.n_slots,), np.int32)
+            widx = np.full((self.n_slots,), self.capacity - 1, np.int32)
+            for s in active:
+                pos[s.index] = s.position
+                widx[s.index] = s.write_idx
+            ntok, _, self.cache = self.decode(self.params, self.cache,
+                                              tok, pos, widx)
+            decode_steps += 1
+            occupancy.append(len(active))
+            ntok_h = np.asarray(ntok)
+
+            for s in active:
+                req = self.requests[s.rid]
+                t = int(ntok_h[s.index])
+                req.tokens.append(t)
+                s.advance()
+                self._cur[s.index] = t
+                if s.generated >= s.max_new or t == self.eos_id:
+                    self._finish(req, decode_steps)
+                    served.append(req)
+                    self.cache = self._release(self.cache, s.index)
+                    s.release()
+
+        wall = time.perf_counter() - t0
+        self.metrics = _summarize(served, wall, engine="continuous",
+                                  decode_steps=decode_steps,
+                                  prefills=prefills, occupancy=occupancy,
+                                  n_slots=self.n_slots)
+        if self.artifact is not None:
+            self.metrics["artifact_bytes"] = self.artifact.artifact_bytes
+        return self.metrics
+
+
+class StaticBatchServer(_ServerBase):
+    """Static batching baseline: the queue is drained in fixed batches
+    and every batch decodes until its *slowest* member finishes — slots
+    are never recycled mid-flight.  Token-for-token it matches the
+    continuous engine (same left-pad masking); only scheduling differs.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 4,
+                 prompt_len: int = 32, max_new_tokens: int = 16):
+        super().__init__(cfg, params)
+        self.batch_size = int(batch_size)
+        self.prompt_len = int(prompt_len)
+        self.max_new = int(max_new_tokens)
+        self.max_new_cap = self.max_new
+        self.queue: List[Request] = []
+        self.prefill = jax.jit(make_prefill_step(cfg))
+        self.decode = jax.jit(make_slot_decode_step(cfg),
+                              donate_argnums=(1,))
+
+    def submit(self, prompts: List[np.ndarray],
+               max_new_tokens: Union[int, Sequence[int], None] = None
+               ) -> List[Request]:
+        reqs = self._make_requests(prompts, max_new_tokens)
+        self.queue.extend(reqs)
+        return reqs
 
     def run(self) -> Dict[str, float]:
-        """Serve until the queue drains; returns latency metrics."""
-        t_start = time.perf_counter()
+        t0 = time.perf_counter()
         served: List[Request] = []
-        total_decode_steps = 0
+        decode_steps = 0
+        prefills = 0
         while self.queue:
-            batch = [self.queue.popleft()
-                     for _ in range(min(self.batch_size, len(self.queue)))]
-            tokens = jnp.asarray(self._pad_batch(batch))
-            next_tok, logits, cache = self.prefill(self.params,
-                                                   {"tokens": tokens})
-            cache = grow_cache(self.cfg, cache, self.max_new + 1)
+            batch = self.queue[:self.batch_size]
+            self.queue = self.queue[self.batch_size:]
+            b = len(batch)
+            tokens = np.zeros((b, self.prompt_len), np.int32)
+            positions = np.full((b, self.prompt_len), -1, np.int32)
+            plens = np.zeros((b,), np.int32)
+            for i, r in enumerate(batch):
+                tokens[i], positions[i], plens[i] = _left_pad(
+                    r.prompt, self.prompt_len)
+            next_tok, _, cache = self.prefill(
+                self.params, {"tokens": jnp.asarray(tokens),
+                              "positions": jnp.asarray(positions)})
+            prefills += 1
+            horizon = max(r.max_new_tokens for r in batch) - 1
+            cache = grow_cache(self.cfg, cache, horizon + 1)
             now = time.perf_counter()
             ntok = np.asarray(next_tok)
             for i, r in enumerate(batch):
                 r.tokens.append(int(ntok[i]))
                 r.first_token_at = now
-            pos = jnp.full((self.batch_size,), self.prompt_len, jnp.int32)
+                r.admitted_step = decode_steps
+                if r.max_new_tokens <= 1:
+                    r.done = True
+                    r.finished_at = now
+                    r.finished_step = decode_steps
             cur = next_tok
-            for step in range(self.max_new - 1):
-                cur, logits, cache = self.decode(self.params, cache, cur,
-                                                 pos + step)
-                total_decode_steps += 1
+            for step in range(horizon):
+                pos = jnp.asarray(plens + step)
+                widx = jnp.full((b,), self.prompt_len + step, jnp.int32)
+                cur, _, cache = self.decode(self.params, cache, cur, pos,
+                                            widx)
+                decode_steps += 1
                 ctok = np.asarray(cur)
                 for i, r in enumerate(batch):
                     if not r.done:
@@ -98,20 +329,15 @@ class BatchServer:
                         if len(r.tokens) >= r.max_new_tokens:
                             r.done = True
                             r.finished_at = time.perf_counter()
-            for r in batch:
-                r.done = True
-                r.finished_at = r.finished_at or time.perf_counter()
+                            r.finished_step = decode_steps
             served.extend(batch)
 
-        wall = time.perf_counter() - t_start
-        ttfts = [r.first_token_at - r.submitted_at for r in served]
-        gen_tokens = sum(len(r.tokens) for r in served)
-        self.metrics = {
-            "requests": len(served),
-            "wall_s": wall,
-            "ttft_mean_s": float(np.mean(ttfts)),
-            "tokens_generated": gen_tokens,
-            "tokens_per_s": gen_tokens / max(wall, 1e-9),
-            "decode_steps": total_decode_steps,
-        }
+        wall = time.perf_counter() - t0
+        self.metrics = _summarize(served, wall, engine="static",
+                                  decode_steps=decode_steps,
+                                  prefills=prefills)
         return self.metrics
+
+
+# Default engine: continuous batching (what the old name promised).
+BatchServer = ContinuousBatchServer
