@@ -1,17 +1,29 @@
-"""Serving benchmark: static vs continuous batching on a mixed-length
-synthetic workload (paper §4.6 operationalised).
+"""Serving benchmark: static vs continuous batching × float vs int8
+precision on a mixed-length synthetic workload (paper §4.6 + C5
+operationalised).
 
-Both engines run the same greedy decode steps over the same requests —
+Engines: both run the same greedy decode steps over the same requests —
 scheduling is the only variable — so the delta is pure head-of-line
-blocking: static batches decode until their slowest member drains,
-continuous batching recycles each KV slot the step its request
-finishes.  Reports tokens/s and TTFT p50/p95 per engine.
+blocking.  Precision: ``--precision int8`` additionally serves the same
+seeded workload through the end-to-end int8 path (QTensor weights,
+dynamic activation quant, Int8KV cache) and reports tokens/s and
+KV-cache HBM bytes side by side with the float baseline — Table 4's
+RAM story transposed to the serving tier.  The precision comparison
+runs f32 activations (the paper's C5 baseline is float32; bf16 is
+emulated on CPU anyway), so the HBM reduction is the honest f32→int8
+ratio.
 
-Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--tiny] [--artifact]
+The workload generator is seeded (``--seed``) and built ONCE per run:
+float-vs-int8 and continuous-vs-static all serve the identical request
+mix, so every ratio in the report is apples-to-apples.
+
+Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--tiny]
+          [--artifact] [--precision {float,int8}] [--seed N]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 
 import jax
@@ -25,7 +37,7 @@ from repro.serve.server import ContinuousBatchServer, StaticBatchServer
 def mixed_workload(vocab: int, n_requests: int, max_prompt: int,
                    max_new: int, seed: int = 0):
     """Bimodal prompts (short/long) with varied generation budgets — the
-    adversarial case for static batching."""
+    adversarial case for static batching.  Fully determined by ``seed``."""
     rng = np.random.RandomState(seed)
     prompts, budgets = [], []
     for i in range(n_requests):
@@ -40,24 +52,20 @@ def mixed_workload(vocab: int, n_requests: int, max_prompt: int,
     return prompts, budgets
 
 
-def run_bench(arch: str = "internlm2-1.8b", *, n_requests: int = 12,
-              slots: int = 4, max_prompt: int = 32, max_new: int = 24,
-              use_artifact: bool = False, seed: int = 0):
-    cfg = configs.get_smoke(arch)
-    params = init_params(cfg, jax.random.key(0))
-    prompts, budgets = mixed_workload(cfg.vocab_size, n_requests,
-                                      max_prompt, max_new, seed)
-
+def _run_engines(cfg, params, prompts, budgets, *, slots, max_prompt,
+                 max_new, use_artifact, precision):
     static = StaticBatchServer(cfg, params, batch_size=slots,
-                               prompt_len=max_prompt, max_new_tokens=max_new)
+                               prompt_len=max_prompt, max_new_tokens=max_new,
+                               precision=precision)
     static.submit(prompts, max_new_tokens=budgets)
     m_static = static.run()
 
     cont = ContinuousBatchServer(
         cfg, params, slots=slots,
         buckets=(max_prompt // 4, max_prompt // 2, max_prompt),
-        max_new_tokens=max_new, use_artifact=use_artifact)
-    c_reqs = cont.submit(prompts, max_new_tokens=budgets)
+        max_new_tokens=max_new, use_artifact=use_artifact,
+        precision=precision)
+    cont.submit(prompts, max_new_tokens=budgets)
     m_cont = cont.run()
 
     # same scheduling-independent outputs → the speedup is real, not a
@@ -67,14 +75,58 @@ def run_bench(arch: str = "internlm2-1.8b", *, n_requests: int = 12,
                     == [cont.requests[i].tokens for i in
                         sorted(cont.requests)])
     assert tokens_match or cfg.family in ("ssm", "hybrid"), \
-        "engines diverged on an attention arch"
+        f"engines diverged on an attention arch ({precision})"
+    return {"static": m_static, "continuous": m_cont,
+            "tokens_match": bool(tokens_match),
+            "tokens_per_s_speedup": (m_cont["tokens_per_s"]
+                                     / max(m_static["tokens_per_s"], 1e-9))}
 
-    speedup = m_cont["tokens_per_s"] / max(m_static["tokens_per_s"], 1e-9)
+
+def run_bench(arch: str = "internlm2-1.8b", *, n_requests: int = 12,
+              slots: int = 4, max_prompt: int = 32, max_new: int = 24,
+              use_artifact: bool = False, seed: int = 0,
+              precision: str = "float"):
+    cfg = configs.get_smoke(arch)
+    if precision == "int8":
+        # precision axis: pin f32 activations so the float baseline is
+        # the paper's C5 comparison point (and CPU-fast).
+        cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(cfg, jax.random.key(0))
+    prompts, budgets = mixed_workload(cfg.vocab_size, n_requests,
+                                      max_prompt, max_new, seed)
+
+    kw = dict(slots=slots, max_prompt=max_prompt, max_new=max_new,
+              use_artifact=use_artifact)
     report = {"arch": arch, "requests": n_requests, "slots": slots,
-              "tokens_match": bool(tokens_match),
-              "static": m_static, "continuous": m_cont,
-              "tokens_per_s_speedup": speedup}
+              "seed": seed, "precision": precision}
+    report["float"] = _run_engines(cfg, params, prompts, budgets,
+                                   precision="float", **kw)
+    if precision == "int8":
+        report["int8"] = _run_engines(cfg, params, prompts, budgets,
+                                      precision="int8", **kw)
+        fb = report["float"]["continuous"]["kv_cache_bytes"]
+        qb = report["int8"]["continuous"]["kv_cache_bytes"]
+        report["kv_cache_hbm_reduction"] = fb / max(qb, 1)
+    # legacy top-level keys (float engine comparison)
+    report.update({k: report["float"][k] for k in
+                   ("static", "continuous", "tokens_match",
+                    "tokens_per_s_speedup")})
     return report
+
+
+def _print_engine_lines(tag, res):
+    s, c = res["static"], res["continuous"]
+    print(f"[{tag}] static     : {s['tokens_per_s']:9.1f} tok/s  "
+          f"ttft p50 {s['ttft_p50_s'] * 1e3:7.1f} ms  "
+          f"p95 {s['ttft_p95_s'] * 1e3:7.1f} ms  "
+          f"decode_steps {s['decode_steps']}")
+    print(f"[{tag}] continuous : {c['tokens_per_s']:9.1f} tok/s  "
+          f"ttft p50 {c['ttft_p50_s'] * 1e3:7.1f} ms  "
+          f"p95 {c['ttft_p95_s'] * 1e3:7.1f} ms  "
+          f"decode_steps {c['decode_steps']}  "
+          f"slot_util {c.get('slot_utilization', 0):.2f}  "
+          f"kv_hbm {c.get('kv_cache_bytes', 0):,} B")
+    print(f"[{tag}] speedup    : {res['tokens_per_s_speedup']:.2f}x tokens/s")
 
 
 def main(argv=None) -> None:
@@ -85,6 +137,14 @@ def main(argv=None) -> None:
     ap.add_argument("--max-prompt", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--artifact", action="store_true")
+    ap.add_argument("--precision", choices=("float", "int8"),
+                    default="float",
+                    help="int8 additionally serves the identical workload"
+                         " end-to-end int8 and reports the KV-cache HBM"
+                         " delta vs float")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload seed (same seed ⇒ identical request mix"
+                         " across engines and precisions)")
     ap.add_argument("--tiny", action="store_true",
                     help="smoke-sized run for scripts/smoke.sh")
     args = ap.parse_args(argv)
@@ -94,19 +154,17 @@ def main(argv=None) -> None:
 
     rep = run_bench(args.arch, n_requests=args.requests, slots=args.slots,
                     max_prompt=args.max_prompt, max_new=args.max_new,
-                    use_artifact=args.artifact)
+                    use_artifact=args.artifact, seed=args.seed,
+                    precision=args.precision)
     print(json.dumps(rep, indent=1))
-    s, c = rep["static"], rep["continuous"]
-    print(f"\nstatic     : {s['tokens_per_s']:9.1f} tok/s  "
-          f"ttft p50 {s['ttft_p50_s'] * 1e3:7.1f} ms  "
-          f"p95 {s['ttft_p95_s'] * 1e3:7.1f} ms  "
-          f"decode_steps {s['decode_steps']}")
-    print(f"continuous : {c['tokens_per_s']:9.1f} tok/s  "
-          f"ttft p50 {c['ttft_p50_s'] * 1e3:7.1f} ms  "
-          f"p95 {c['ttft_p95_s'] * 1e3:7.1f} ms  "
-          f"decode_steps {c['decode_steps']}  "
-          f"slot_util {c.get('slot_utilization', 0):.2f}")
-    print(f"speedup    : {rep['tokens_per_s_speedup']:.2f}x tokens/s")
+    print()
+    _print_engine_lines("float", rep["float"])
+    if "int8" in rep:
+        _print_engine_lines("int8 ", rep["int8"])
+        print(f"\nkv-cache HBM: float "
+              f"{rep['float']['continuous']['kv_cache_bytes']:,} B  →  int8 "
+              f"{rep['int8']['continuous']['kv_cache_bytes']:,} B  "
+              f"({rep['kv_cache_hbm_reduction']:.2f}x reduction)")
 
 
 if __name__ == "__main__":

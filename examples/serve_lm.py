@@ -25,6 +25,8 @@ def main():
     ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--precision", choices=("float", "int8"),
+                    default="float")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch)   # reduced config on CPU
@@ -32,12 +34,13 @@ def main():
     if args.engine == "static":
         server = StaticBatchServer(cfg, params, batch_size=args.slots,
                                    prompt_len=args.prompt_len,
-                                   max_new_tokens=args.max_new)
+                                   max_new_tokens=args.max_new,
+                                   precision=args.precision)
     else:
         server = ContinuousBatchServer(
             cfg, params, slots=args.slots,
             buckets=(args.prompt_len // 2, args.prompt_len),
-            max_new_tokens=args.max_new)
+            max_new_tokens=args.max_new, precision=args.precision)
     rng = np.random.RandomState(0)
     # mixed-length workload: short and long prompts, varied budgets
     lens = [rng.randint(4, args.prompt_len + 1) for _ in range(args.requests)]

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # End-to-end smoke: the paper's quickstart loop + the serving benchmark
-# in tiny mode. Finishes in a few minutes on CPU.
+# in tiny mode, on both sides of the precision axis (paper C5: the same
+# engine serves float and full-int8).  Finishes in a few minutes on CPU.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -9,5 +10,9 @@ echo "=== quickstart (impulse train -> quantize -> estimate -> compile) ==="
 python examples/quickstart.py
 
 echo
-echo "=== serve bench (static vs continuous batching, tiny) ==="
-python benchmarks/serve_bench.py --tiny
+echo "=== serve bench (static vs continuous batching, tiny, float) ==="
+python benchmarks/serve_bench.py --tiny --precision float
+
+echo
+echo "=== serve bench (float vs int8 end-to-end, tiny) ==="
+python benchmarks/serve_bench.py --tiny --precision int8

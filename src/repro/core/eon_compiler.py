@@ -110,7 +110,8 @@ def compile_impulse(impulse, batch_size: int = 1,
 
 
 def compile_serve_decode(cfg, params, *, slots: int, capacity: int,
-                         rules=None, mesh=None) -> CompiledArtifact:
+                         rules=None, mesh=None,
+                         policy=None) -> CompiledArtifact:
     """Serve-from-artifact hook (paper C4, end-to-end): AOT-compile the
     continuous-batching decode step into a ``CompiledArtifact`` so the
     server's hot loop runs the same kind of serialized executable we
@@ -118,18 +119,33 @@ def compile_serve_decode(cfg, params, *, slots: int, capacity: int,
 
     ``slots`` is the engine's decode batch (slot count), ``capacity`` the
     per-slot KV row length (max bucket + max generation budget).
+    ``policy`` (``PrecisionPolicy``) lowers the int8 variant: QTensor
+    params and an Int8KV cache.  The artifact's static resource report
+    carries the KV-cache HBM footprint of both precisions so the deploy
+    decision can read the delta without compiling twice — Table 4's
+    RAM/flash story transposed to the serving tier.
     """
-    from repro.serve.kvcache import abstract_decode_cache
+    from repro.serve.kvcache import abstract_decode_cache, decode_cache_nbytes
     from repro.serve.serve_step import make_slot_decode_step
 
-    step = make_slot_decode_step(cfg, rules=rules, mesh=mesh)
+    step = make_slot_decode_step(cfg, rules=rules, mesh=mesh, policy=policy)
     params_abs = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype),
         params)
-    cache_abs = abstract_decode_cache(cfg, slots, capacity)
+    cache_abs = abstract_decode_cache(cfg, slots, capacity, policy)
     vec = jax.ShapeDtypeStruct((slots,), jnp.int32)
-    return compile_fn(step, params_abs, cache_abs, vec, vec, vec,
-                      name=f"{cfg.name}-decode-b{slots}-s{capacity}")
+    suffix = ""
+    if policy is not None and policy.weights == "int8":
+        suffix = "-int8"
+    art = compile_fn(step, params_abs, cache_abs, vec, vec, vec,
+                     name=f"{cfg.name}-decode-b{slots}-s{capacity}{suffix}")
+    art.memory["kv_cache_bytes"] = decode_cache_nbytes(cache_abs)
+    art.memory["kv_cache_bytes_float"] = (
+        art.memory["kv_cache_bytes"] if suffix == ""
+        else decode_cache_nbytes(
+            abstract_decode_cache(cfg, slots, capacity, None)))
+    art.memory["param_bytes"] = decode_cache_nbytes(params_abs)
+    return art
 
 
 def measure_dispatch_overhead(fn: Callable, *args, iters: int = 20

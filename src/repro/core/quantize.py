@@ -13,11 +13,95 @@ backend, and the serving path pairs with ``kernels/int8_matmul`` on TPU.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# PrecisionPolicy: the single knob the serving stack threads end-to-end
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """How params, activations, and the KV cache are represented.
+
+    ``weights``      "float" | "int8"  — int8 wraps projection weights in
+                     ``QTensor`` (per-output-channel symmetric int8).
+    ``activations``  "dynamic" | "calibrated" — dynamic quantizes each
+                     matmul input per row from its own amax; calibrated
+                     uses a ``QTensor.amax`` recorded from representative
+                     batches (``AmaxObserver``), falling back to dynamic
+                     where no amax was attached.
+    ``kv_cache``     "float" | "int8" — int8 stores decode caches as
+                     ``Int8KV`` (int8 values + per-entry/per-head f32
+                     scales).
+    ``compute``      "native" | "fake_quant" — native runs the int8
+                     kernels; fake_quant runs the quantize→dequantize
+                     round trip in float (bit-faithful reference: the
+                     serving tier's token-exactness oracle).
+    """
+    weights: str = "float"
+    activations: str = "dynamic"
+    kv_cache: str = "float"
+    compute: str = "native"
+
+    def __post_init__(self):
+        assert self.weights in ("float", "int8"), self.weights
+        assert self.activations in ("dynamic", "calibrated"), self.activations
+        assert self.kv_cache in ("float", "int8"), self.kv_cache
+        assert self.compute in ("native", "fake_quant"), self.compute
+
+
+FLOAT = PrecisionPolicy()
+INT8 = PrecisionPolicy(weights="int8", kv_cache="int8")
+INT8_FAKEQUANT = dataclasses.replace(INT8, compute="fake_quant")
+
+_POLICIES = {"float": FLOAT, "int8": INT8,
+             "int8_fakequant": INT8_FAKEQUANT}
+
+
+def policy_for(name) -> PrecisionPolicy:
+    """Resolve a CLI-level precision name (or pass a policy through)."""
+    if isinstance(name, PrecisionPolicy):
+        return name
+    if name not in _POLICIES:
+        raise ValueError(f"unknown precision {name!r}; "
+                         f"one of {sorted(_POLICIES)}")
+    return _POLICIES[name]
+
+
+class QTensor(NamedTuple):
+    """A quantized weight: int8 values + per-output-channel f32 scales.
+
+    ``q`` is (..., K, N) int8, ``scale`` (..., N) f32 (leading dims are
+    stacked layers, sliced off by ``lax.scan``).  ``amax`` optionally
+    carries a calibrated input-activation amax for this matmul site
+    (scalar or per-layer (L,)); None means dynamic activation ranges.
+    """
+    q: jax.Array
+    scale: jax.Array
+    amax: Optional[jax.Array] = None
+
+
+class Int8KV(NamedTuple):
+    """An int8 KV-cache tensor: values (..., B, S, H, D) int8 + one f32
+    scale per cache entry per head, shape (..., B, S, H)."""
+    q: jax.Array
+    scale: jax.Array
+
+
+# jax.export serializes pytree defs by name: register both quantized
+# containers so int8 decode steps round-trip as CompiledArtifacts.
+try:
+    from jax import export as _jax_export
+    _jax_export.register_namedtuple_serialization(
+        QTensor, serialized_name="repro.quantize.QTensor")
+    _jax_export.register_namedtuple_serialization(
+        Int8KV, serialized_name="repro.quantize.Int8KV")
+except (ImportError, AttributeError):  # pragma: no cover - older jax
+    pass
 
 
 @dataclasses.dataclass
@@ -98,6 +182,155 @@ def qat_params(params):
     """Apply STE fake quant to every quantizable leaf (wrap a loss with
     this for quantization-aware training)."""
     return jax.tree.map(fake_quant_ste, params)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic activation quantization (per-row symmetric — the serving path)
+# ---------------------------------------------------------------------------
+def quant_dynamic(x: jax.Array, amax: Optional[jax.Array] = None):
+    """Symmetric int8 per-row quantization of a matmul input.
+
+    x: (..., K) float.  Each row (the last-axis vector entering the
+    contraction) gets its own scale from its amax, so the int8 matmul's
+    per-row × per-channel dequant is exact.  ``amax`` (broadcastable to
+    x.shape[:-1]) substitutes a calibrated range for the observed one.
+    Returns (q int8 (..., K), scale f32 (...,)).
+    """
+    x32 = x.astype(jnp.float32)
+    if amax is None:
+        row_amax = jnp.max(jnp.abs(x32), axis=-1)
+    else:
+        row_amax = jnp.broadcast_to(
+            jnp.asarray(amax, jnp.float32), x32.shape[:-1])
+    scale = jnp.maximum(row_amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def fake_quant_dynamic(x: jax.Array,
+                       amax: Optional[jax.Array] = None) -> jax.Array:
+    """Quantize→dequantize round trip of ``quant_dynamic`` in float —
+    bit-faithful simulation of the int8 activation path."""
+    q, scale = quant_dynamic(x, amax)
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+# ---------------------------------------------------------------------------
+# KV-cache quantization (per-entry/per-head vector scales)
+# ---------------------------------------------------------------------------
+def quant_kv(x: jax.Array) -> Int8KV:
+    """Quantize a KV tensor (..., H, D): one symmetric scale per (entry,
+    head) vector of length D."""
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale[..., None]), -127, 127)
+    return Int8KV(q.astype(jnp.int8), scale.astype(jnp.float32))
+
+
+def dequant_kv(kv: Int8KV, dtype=jnp.float32) -> jax.Array:
+    return (kv.q.astype(jnp.float32) * kv.scale[..., None]).astype(dtype)
+
+
+def maybe_quant_kv(policy: Optional[PrecisionPolicy], x: jax.Array):
+    """Apply the policy's KV-cache representation to a float KV tensor:
+    Int8KV (native), quant→dequant float (fake_quant), or passthrough."""
+    if policy is None or policy.kv_cache != "int8":
+        return x
+    kv = quant_kv(x)
+    if policy.compute == "fake_quant":
+        return dequant_kv(kv, x.dtype)
+    return kv
+
+
+# ---------------------------------------------------------------------------
+# Model-param quantization for the serving path (QTensor pytree)
+# ---------------------------------------------------------------------------
+# Param sub-trees whose 2D+ leaves feed ops.quant_matmul.  MoE expert
+# banks and SSM dynamics keep float (their einsum dispatch never routes
+# through the dense matmul entry point); embed/unembed stay float so
+# logits keep full precision.
+QUANT_SCOPES = ("attn", "mlp", "xattn")
+
+
+def _leaf_qtensor(w: jax.Array) -> QTensor:
+    """Per-output-channel symmetric int8 over the contraction axis (-2),
+    keeping per-layer scales for stacked (L, K, N) leaves."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w / scale[..., None, :]), -127, 127)
+    return QTensor(q.astype(jnp.int8), scale.astype(jnp.float32))
+
+
+def quantize_model_params(params, policy: PrecisionPolicy = INT8):
+    """Wrap every projection weight consumed by ``ops.quant_matmul`` in a
+    ``QTensor``.  Leaves outside QUANT_SCOPES (embeddings, norms, MoE
+    banks, SSM dynamics) pass through untouched."""
+    if policy.weights != "int8":
+        return params
+
+    def wrap(path, leaf):
+        in_scope = any(getattr(k, "key", None) in QUANT_SCOPES
+                       for k in path)
+        if (in_scope and leaf.ndim >= 2
+                and jnp.issubdtype(leaf.dtype, jnp.floating)):
+            return _leaf_qtensor(leaf)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(wrap, params)
+
+
+def attach_act_amax(qparams, amax_by_scope: Dict[str, float]):
+    """Attach calibrated activation amax values to QTensor sites, keyed
+    by their innermost scope/leaf name (e.g. {"wq": 3.1, "w_down": 8.2}
+    or coarser {"attn": 3.5}).  Unmatched sites keep dynamic ranges.
+
+    The amax is broadcast to the leaf's stacked prefix (``q.shape[:-2]``)
+    so ``lax.scan`` over stacked layer params slices it alongside the
+    weight pair; a per-layer array of that shape passes through as-is.
+    """
+    def attach(path, leaf):
+        if not isinstance(leaf, QTensor):
+            return leaf
+        for k in reversed(path):
+            name = getattr(k, "key", None)
+            if name in amax_by_scope:
+                amax = jnp.broadcast_to(
+                    jnp.asarray(amax_by_scope[name], jnp.float32),
+                    leaf.q.shape[:-2])
+                return leaf._replace(amax=amax)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(
+        attach, qparams, is_leaf=lambda x: isinstance(x, QTensor))
+
+
+@dataclasses.dataclass
+class AmaxObserver:
+    """Running activation-amax over representative batches (paper C5's
+    calibration step).  ``momentum=None`` tracks the running max;
+    otherwise an EMA, which is robust to outlier batches."""
+    momentum: Optional[float] = None
+    amax: Optional[float] = None
+
+    def update(self, x: jax.Array) -> float:
+        cur = float(jnp.max(jnp.abs(x)))
+        if self.amax is None:
+            self.amax = cur
+        elif self.momentum is None:
+            self.amax = max(self.amax, cur)
+        else:
+            self.amax = self.momentum * self.amax + (1 - self.momentum) * cur
+        return self.amax
+
+
+def calibrate_amax(batches, momentum: Optional[float] = None) -> float:
+    """Fold representative batches into one calibrated amax."""
+    obs = AmaxObserver(momentum=momentum)
+    for x in batches:
+        obs.update(x)
+    assert obs.amax is not None, "no calibration batches given"
+    return obs.amax
 
 
 # ---------------------------------------------------------------------------

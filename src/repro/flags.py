@@ -8,12 +8,36 @@ bf16_params  : cast float32 master weights to bf16 once at step entry —
 bf16_attn_p  : consume softmax probabilities in bf16 in the chunked-
                attention pv matmul (flash kernels do this on the MXU);
                accumulators stay f32.
+kernel_path  : pin every ``kernels/ops.py`` dispatch to one backend
+               ("pallas" | "interpret" | "ref"); None means the default
+               backend probe (pallas on TPU, ref elsewhere).  Seeded
+               from $REPRO_KERNEL_PATH so CI can exercise the Pallas
+               interpret path suite-wide without touching call sites.
+               Read when a function traces: set it *before* the first
+               call of any jitted function you want pinned — an
+               already-compiled executable keeps the backend it traced
+               with.
 """
 from __future__ import annotations
+
+import os
+
+_KERNEL_PATHS = (None, "pallas", "interpret", "ref")
+
+
+def _env_kernel_path():
+    path = os.environ.get("REPRO_KERNEL_PATH") or None
+    if path not in _KERNEL_PATHS:
+        raise ValueError(
+            f"REPRO_KERNEL_PATH={path!r}: expected one of "
+            f"{[p for p in _KERNEL_PATHS if p]}")
+    return path
+
 
 FLAGS = {
     "bf16_params": False,
     "bf16_attn_p": False,
+    "kernel_path": _env_kernel_path(),
 }
 
 
@@ -21,8 +45,10 @@ def set_flags(**kw) -> None:
     for k, v in kw.items():
         if k not in FLAGS:
             raise KeyError(k)
+        if k == "kernel_path" and v not in _KERNEL_PATHS:
+            raise ValueError(f"kernel_path={v!r}")
         FLAGS[k] = v
 
 
-def get(name: str) -> bool:
+def get(name: str):
     return FLAGS[name]

@@ -37,21 +37,41 @@ def _kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[...] = acc_ref[...].astype(jnp.float32) * scale
 
 
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def int8_matmul(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
                 w_scale: jax.Array, *, bm: int = 128, bn: int = 128,
                 bk: int = 256, interpret: bool = False) -> jax.Array:
     """x_q: (M, K) int8; w_q: (K, N) int8; x_scale: (M,) f32 per-row;
-    w_scale: (N,) f32 per-channel.  Returns (M, N) f32."""
+    w_scale: (N,) f32 per-channel.  Returns (M, N) f32.
+
+    Ragged M/K/N (not multiples of the block dims) are zero-padded up to
+    the tile grid and the output sliced back — exact, because zero int8
+    entries contribute nothing to the int32 dot and padded output
+    rows/cols are dropped.  Tiles stay (8, 128)-aligned rather than
+    shrinking to the ragged remainder (misaligned tiles stall the MXU).
+    """
     m, k = x_q.shape
     k2, n = w_q.shape
     assert k == k2, (k, k2)
-    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
-    n_k = k // bk
+    # Clamp oversized blocks to the (aligned) problem dim, then pad every
+    # dim up to its block multiple.
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 128))
+    bk = min(bk, _round_up(k, 128))
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    if (mp, np_, kp) != (m, n, k):
+        x_q = jnp.pad(x_q, ((0, mp - m), (0, kp - k)))
+        w_q = jnp.pad(w_q, ((0, kp - k), (0, np_ - n)))
+        x_scale = jnp.pad(x_scale, (0, mp - m))
+        w_scale = jnp.pad(w_scale, (0, np_ - n))
+    n_k = kp // bk
 
-    grid = (m // bm, n // bn, n_k)
-    return pl.pallas_call(
+    grid = (mp // bm, np_ // bn, n_k)
+    out = pl.pallas_call(
         functools.partial(_kernel, n_k=n_k),
         grid=grid,
         in_specs=[
@@ -61,7 +81,8 @@ def int8_matmul(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
             pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(x_q, w_q, x_scale, w_scale)
+    return out[:m, :n] if (mp, np_) != (m, n) else out

@@ -2,7 +2,15 @@
 
 The model layers call these; on the CPU container every graph lowers via
 the ref path (so dry-runs/pjit work), while on a real TPU backend the
-Pallas kernels take over.  ``force`` pins a path for tests/benchmarks.
+Pallas kernels take over.  ``force`` pins a path for one call; the
+``repro.flags`` level ``kernel_path`` (seeded from $REPRO_KERNEL_PATH)
+pins every dispatch suite-wide, so CI can run the whole test matrix
+through Pallas interpret mode without touching call sites.
+
+``quant_matmul`` is the precision-aware matmul every dense/projection op
+in ``models/`` routes through: plain float arrays take the untouched
+``x @ w`` path, ``QTensor`` weights take the dynamic-activation int8
+path (or its fake-quant float simulation, per ``PrecisionPolicy``).
 """
 from __future__ import annotations
 
@@ -12,6 +20,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import flags
+from repro.core.quantize import PrecisionPolicy, QTensor, quant_dynamic
 from repro.kernels import flash_attention as fa
 from repro.kernels import int8_matmul as im
 from repro.kernels import mamba_scan as ms
@@ -26,8 +36,15 @@ def _on_tpu() -> bool:
         return False
 
 
+def resolve_path(force: Optional[str] = None) -> str:
+    """Backend for one kernel dispatch: per-call force > flags pin >
+    default probe (pallas on TPU, ref elsewhere)."""
+    return (force or flags.get("kernel_path")
+            or ("pallas" if _on_tpu() else "ref"))
+
+
 def int8_matmul(x_q, w_q, x_scale, w_scale, *, force: Optional[str] = None):
-    path = force or ("pallas" if _on_tpu() else "ref")
+    path = resolve_path(force)
     if path == "pallas":
         return im.int8_matmul(x_q, w_q, x_scale, w_scale)
     if path == "interpret":
@@ -35,10 +52,44 @@ def int8_matmul(x_q, w_q, x_scale, w_scale, *, force: Optional[str] = None):
     return ref.int8_matmul_ref(x_q, w_q, x_scale, w_scale)
 
 
+def quant_matmul(x: jax.Array, w, *,
+                 policy: Optional[PrecisionPolicy] = None,
+                 force: Optional[str] = None) -> jax.Array:
+    """Precision-aware matmul: ``x (..., K) @ w (K, N)``.
+
+    ``w`` is either a raw float array — the float path, identical to the
+    pre-refactor ``x @ w.astype(x.dtype)`` — or a ``QTensor``: the input
+    rows are quantized dynamically (or against the QTensor's calibrated
+    amax), the int8×int8 kernel runs with dequant fused in its epilogue,
+    and the f32 result is cast back to the activation dtype.  With
+    ``policy.compute == "fake_quant"`` the same quantization decisions
+    run in float: the *integer-valued* f32 matmul with scales applied
+    once afterward — the same accumulate-then-scale order as the int8
+    kernel, so the simulation is bit-identical to the native path while
+    every partial dot product stays inside f32's exact-integer range
+    (|sum| < 2^24, guaranteed at worst-case int8 magnitudes for K ≤ 1040
+    and true in practice far beyond).  That is the reference the int8
+    serving path is tested token-exact against.
+    """
+    if not isinstance(w, QTensor):
+        return x @ w.astype(x.dtype)
+    policy = policy or PrecisionPolicy(weights="int8")
+    lead, kdim = x.shape[:-1], x.shape[-1]
+    x2 = x.reshape(-1, kdim)
+    amax = w.amax if policy.activations == "calibrated" else None
+    xq, xs = quant_dynamic(x2, amax)
+    if policy.compute == "fake_quant":
+        acc = xq.astype(jnp.float32) @ w.q.astype(jnp.float32)
+        out = acc * (xs[:, None] * w.scale[..., None, :])
+    else:
+        out = int8_matmul(xq, w.q, xs, w.scale, force=force)
+    return out.reshape(*lead, w.q.shape[-1]).astype(x.dtype)
+
+
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     force: Optional[str] = None):
     """q/k/v: (B, S, H, D) — GQA expansion done here; kernel takes (BH,S,D)."""
-    path = force or ("pallas" if _on_tpu() else "ref")
+    path = resolve_path(force)
     if path == "ref":
         return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
     b, s, h, d = q.shape
@@ -57,7 +108,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 def mamba_scan(x, dt, b_mat, c_mat, a, *, force: Optional[str] = None
                ) -> Tuple[jax.Array, jax.Array]:
-    path = force or ("pallas" if _on_tpu() else "ref")
+    path = resolve_path(force)
     if path == "pallas":
         return ms.mamba_scan(x, dt, b_mat, c_mat, a)
     if path == "interpret":
@@ -68,7 +119,7 @@ def mamba_scan(x, dt, b_mat, c_mat, a, *, force: Optional[str] = None
 def mel_frontend(frames, window, dft_cos, dft_sin, mel_fb, *,
                  force: Optional[str] = None):
     """frames: (..., F, L) — leading dims folded into the grid."""
-    path = force or ("pallas" if _on_tpu() else "ref")
+    path = resolve_path(force)
     if path == "ref":
         return ref.mel_frontend_ref(frames, window, dft_cos, dft_sin, mel_fb)
     lead = frames.shape[:-2]

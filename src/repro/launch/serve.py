@@ -30,6 +30,10 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--artifact", action="store_true",
                     help="decode via AOT CompiledArtifact (EON-style)")
+    ap.add_argument("--precision", choices=("float", "int8"),
+                    default="float",
+                    help="int8: QTensor weights + dynamic activation quant"
+                         " + Int8KV cache (paper C5 end-to-end)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
@@ -38,12 +42,14 @@ def main() -> None:
     if args.engine == "static":
         server = StaticBatchServer(cfg, params, batch_size=args.slots,
                                    prompt_len=args.prompt_len,
-                                   max_new_tokens=args.max_new)
+                                   max_new_tokens=args.max_new,
+                                   precision=args.precision)
     else:
         server = ContinuousBatchServer(
             cfg, params, slots=args.slots,
             buckets=(args.prompt_len // 2, args.prompt_len),
-            max_new_tokens=args.max_new, use_artifact=args.artifact)
+            max_new_tokens=args.max_new, use_artifact=args.artifact,
+            precision=args.precision)
     rng = np.random.RandomState(0)
     prompts = [rng.randint(0, cfg.vocab_size, size=args.prompt_len)
                .astype(np.int32) for _ in range(args.requests)]

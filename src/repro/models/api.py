@@ -70,14 +70,19 @@ def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
             "position": _sds((b,), jnp.int32)}
 
 
-def abstract_cache(cfg: ArchConfig, shape: ShapeConfig):
-    """Cache ShapeDtypeStructs via eval_shape over the prefill path."""
+def abstract_cache(cfg: ArchConfig, shape: ShapeConfig, policy=None):
+    """Cache ShapeDtypeStructs via eval_shape over the prefill path.
+
+    ``policy`` (a ``PrecisionPolicy``) changes the cache *structure*:
+    int8 KV caches come back as Int8KV pairs of structs.  The abstract
+    params stay float — cache layout depends only on the policy.
+    """
     params = abstract_params(cfg)
     pre_specs = prefill_input_specs(cfg, shape)
     fns = model_fns(cfg)
 
     def prefill(p, inputs):
-        return fns.forward_prefill(cfg, p, inputs)
+        return fns.forward_prefill(cfg, p, inputs, policy)
 
     _, cache = jax.eval_shape(prefill, params, pre_specs)
     return cache

@@ -7,13 +7,15 @@ cross-attention, both scanned over stacked layer params.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.core.arch import ArchConfig
+from repro.core.quantize import PrecisionPolicy, maybe_quant_kv
+from repro.kernels.ops import quant_matmul
 from repro.models.layers import (attention_decode_layer, attention_layer,
                                  rms_norm, swiglu_mlp)
 from repro.models.transformer import (_maybe_remat, default_positions,
@@ -29,7 +31,8 @@ def _attn_kwargs(cfg: ArchConfig):
 
 
 def encode(cfg: ArchConfig, params, enc_embeddings: jax.Array, *,
-           remat: str = "none") -> jax.Array:
+           remat: str = "none",
+           policy: Optional[PrecisionPolicy] = None) -> jax.Array:
     """Bidirectional encoder over frame embeddings (B, S_enc, d)."""
     x = enc_embeddings.astype(cfg.activation_dtype)
     x = constrain(x, ("act_batch", "act_res_seq", "act_dmodel"))
@@ -39,10 +42,11 @@ def encode(cfg: ArchConfig, params, enc_embeddings: jax.Array, *,
     def body(h, p):
         hh = rms_norm(p["attn_norm"], h, cfg.norm_eps)
         attn_out, _ = attention_layer(p["attn"], hh, positions,
-                                      causal=False, **_attn_kwargs(cfg))
+                                      causal=False, policy=policy,
+                                      **_attn_kwargs(cfg))
         h = h + attn_out
         hh = rms_norm(p["mlp_norm"], h, cfg.norm_eps)
-        h = h + swiglu_mlp(p["mlp"], hh)
+        h = h + swiglu_mlp(p["mlp"], hh, policy)
         return constrain(h, ("act_batch", "act_res_seq", "act_dmodel")), None
 
     x, _ = lax.scan(_maybe_remat(body, remat), x, params["enc_blocks"])
@@ -50,58 +54,65 @@ def encode(cfg: ArchConfig, params, enc_embeddings: jax.Array, *,
 
 
 def _decoder_body(cfg: ArchConfig, enc_out, enc_positions, positions,
-                  collect_kv: bool):
+                  collect_kv: bool,
+                  policy: Optional[PrecisionPolicy] = None):
     def body(h, p):
         hh = rms_norm(p["attn_norm"], h, cfg.norm_eps)
         attn_out, kv = attention_layer(p["attn"], hh, positions,
-                                       **_attn_kwargs(cfg))
+                                       policy=policy, **_attn_kwargs(cfg))
         h = h + attn_out
         # cross attention: K/V from encoder output, no rope on keys
         hh = rms_norm(p["xattn_norm"], h, cfg.norm_eps)
-        xk = (enc_out @ p["xattn"]["wk"].astype(enc_out.dtype)).reshape(
+        xk = quant_matmul(enc_out, p["xattn"]["wk"], policy=policy).reshape(
             *enc_out.shape[:2], cfg.n_kv_heads, cfg.resolved_head_dim)
-        xv = (enc_out @ p["xattn"]["wv"].astype(enc_out.dtype)).reshape(
+        xv = quant_matmul(enc_out, p["xattn"]["wv"], policy=policy).reshape(
             *enc_out.shape[:2], cfg.n_kv_heads, cfg.resolved_head_dim)
         kw = dict(_attn_kwargs(cfg))
         kw["rope_variant"] = "none"
         x_out, _ = attention_layer(p["xattn"], hh, positions, causal=False,
                                    kv_override=(xk, xv),
-                                   kv_positions=enc_positions, **kw)
+                                   kv_positions=enc_positions, policy=policy,
+                                   **kw)
         h = h + x_out
         hh = rms_norm(p["mlp_norm"], h, cfg.norm_eps)
-        h = h + swiglu_mlp(p["mlp"], hh)
+        h = h + swiglu_mlp(p["mlp"], hh, policy)
         h = constrain(h, ("act_batch", "act_res_seq", "act_dmodel"))
         return h, (kv, (xk, xv)) if collect_kv else None
     return body
 
 
 def forward_train(cfg: ArchConfig, params, inputs: Dict[str, jax.Array], *,
-                  remat: str = "full"):
+                  remat: str = "full",
+                  policy: Optional[PrecisionPolicy] = None):
     """inputs: enc_embeddings (B, S_enc, d), tokens (B, S), labels (B, S)."""
     params = maybe_cast_params(params, cfg)
-    enc_out = encode(cfg, params, inputs["enc_embeddings"], remat=remat)
+    enc_out = encode(cfg, params, inputs["enc_embeddings"], remat=remat,
+                     policy=policy)
     tokens = inputs["tokens"]
     b, s = tokens.shape
     x = embed_tokens(params, tokens, cfg)
     positions = default_positions(cfg, b, s)
     enc_positions = default_positions(cfg, b, enc_out.shape[1])
-    body = _decoder_body(cfg, enc_out, enc_positions, positions, False)
+    body = _decoder_body(cfg, enc_out, enc_positions, positions, False,
+                         policy=policy)
     x, _ = lax.scan(_maybe_remat(body, remat), x, params["blocks"])
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     logits = unembed(params, x, cfg)
     return lm_loss(logits, inputs["labels"], cfg.vocab_size)
 
 
-def forward_prefill(cfg: ArchConfig, params, inputs: Dict[str, jax.Array]):
+def forward_prefill(cfg: ArchConfig, params, inputs: Dict[str, jax.Array],
+                    policy: Optional[PrecisionPolicy] = None):
     """Prefill the decoder self-attn cache + precompute cross-attn KV."""
     params = maybe_cast_params(params, cfg)
-    enc_out = encode(cfg, params, inputs["enc_embeddings"])
+    enc_out = encode(cfg, params, inputs["enc_embeddings"], policy=policy)
     tokens = inputs["tokens"]
     b, s = tokens.shape
     x = embed_tokens(params, tokens, cfg)
     positions = default_positions(cfg, b, s)
     enc_positions = default_positions(cfg, b, enc_out.shape[1])
-    body = _decoder_body(cfg, enc_out, enc_positions, positions, True)
+    body = _decoder_body(cfg, enc_out, enc_positions, positions, True,
+                         policy=policy)
     x, kvs = lax.scan(body, x, params["blocks"])
     (k, v), (xk, xv) = kvs
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
@@ -111,11 +122,15 @@ def forward_prefill(cfg: ArchConfig, params, inputs: Dict[str, jax.Array]):
              "xk": _constrain_kv_cache(xk), "xv": _constrain_kv_cache(xv),
              "full_pos": positions,
              "enc_pos": enc_positions}
+    if policy is not None and policy.kv_cache == "int8":
+        for key in ("k", "v", "xk", "xv"):
+            cache[key] = maybe_quant_kv(policy, cache[key])
     return logits, cache
 
 
 def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
-                   position: jax.Array, write_idx=None):
+                   position: jax.Array, write_idx=None,
+                   policy: Optional[PrecisionPolicy] = None):
     params = maybe_cast_params(params, cfg)
     x = embed_tokens(params, token[:, None], cfg)
     widx = position if write_idx is None else write_idx
@@ -125,15 +140,15 @@ def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
         hh = rms_norm(p["attn_norm"], h, cfg.norm_eps)
         attn_out, ck, cv, _ = attention_decode_layer(
             p["attn"], hh, position, ck, cv, cache["full_pos"], widx,
-            **_attn_kwargs(cfg))
+            policy=policy, **_attn_kwargs(cfg))
         h = h + attn_out
         hh = rms_norm(p["xattn_norm"], h, cfg.norm_eps)
         x_out, _, _, _ = attention_decode_layer(
             p["xattn"], hh, position, xk, xv, cache["enc_pos"], position,
-            cross=True, **_attn_kwargs(cfg))
+            cross=True, policy=policy, **_attn_kwargs(cfg))
         h = h + x_out
         hh = rms_norm(p["mlp_norm"], h, cfg.norm_eps)
-        h = h + swiglu_mlp(p["mlp"], hh)
+        h = h + swiglu_mlp(p["mlp"], hh, policy)
         return h, (ck, cv)
 
     x, (ks, vs) = lax.scan(

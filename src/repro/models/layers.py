@@ -26,9 +26,34 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import flags
+from repro.core.quantize import (Int8KV, PrecisionPolicy, dequant_kv,
+                                 quant_kv)
+from repro.kernels.ops import quant_matmul
 from repro.sharding.policy import constrain
 
 NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# KV-cache representation helpers (PrecisionPolicy, serving tier)
+# ---------------------------------------------------------------------------
+def kv_read(cache, dtype) -> jax.Array:
+    """Materialize a KV-cache tensor for attention: dequantize Int8KV,
+    pass float caches through."""
+    if isinstance(cache, Int8KV):
+        return dequant_kv(cache, dtype)
+    return cache
+
+
+def _constrain_decode_kv(cache):
+    if isinstance(cache, Int8KV):
+        return Int8KV(
+            constrain(cache.q, ("act_batch", "act_cache_seq",
+                                "act_kv_heads", None)),
+            constrain(cache.scale, ("act_batch", "act_cache_seq",
+                                    "act_kv_heads")))
+    return constrain(cache, ("act_batch", "act_cache_seq",
+                             "act_kv_heads", None))
 
 
 # ---------------------------------------------------------------------------
@@ -289,17 +314,23 @@ def attention_layer(p: dict, x: jax.Array, positions: jax.Array, *,
                     window: int = 0, causal: bool = True,
                     chunk_threshold: int = 8192,
                     kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
-                    kv_positions: Optional[jax.Array] = None):
+                    kv_positions: Optional[jax.Array] = None,
+                    policy: Optional[PrecisionPolicy] = None):
     """Full attention layer on a whole sequence (train / prefill).
 
     Returns (out, (k, v)) — the K/V tensors are returned so prefill can
-    populate the cache.  ``kv_override`` feeds cross-attention.
+    populate the cache.  ``kv_override`` feeds cross-attention.  All
+    projections consume params through ``quant_matmul`` — float arrays
+    and int8 ``QTensor`` weights take the same call convention.
     """
     b, s, _ = x.shape
-    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, n_heads, head_dim)
+    q = quant_matmul(x, p["wq"], policy=policy).reshape(
+        b, s, n_heads, head_dim)
     if kv_override is None:
-        k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, n_kv_heads, head_dim)
-        v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, n_kv_heads, head_dim)
+        k = quant_matmul(x, p["wk"], policy=policy).reshape(
+            b, s, n_kv_heads, head_dim)
+        v = quant_matmul(x, p["wv"], policy=policy).reshape(
+            b, s, n_kv_heads, head_dim)
         k_pos = positions if positions.ndim == 2 else positions[..., 0]
         q, k = position_encode(q, k, positions, rope_variant, rope_theta,
                                mrope_sections)
@@ -325,33 +356,46 @@ def attention_layer(p: dict, x: jax.Array, positions: jax.Array, *,
     else:
         o = full_attention(q, k, v, q_pos1d, k_pos, causal=causal)
     o = constrain(o, ("act_batch", "act_seq", "act_heads", None))
-    out = o.reshape(b, s, n_heads * head_dim) @ p["wo"].astype(x.dtype)
+    out = quant_matmul(o.reshape(b, s, n_heads * head_dim), p["wo"],
+                       policy=policy)
     return out, (k, v)
 
 
 def attention_decode_layer(p: dict, x: jax.Array, position: jax.Array,
-                           cache_k: jax.Array, cache_v: jax.Array,
+                           cache_k, cache_v,
                            cache_positions: jax.Array, write_idx: jax.Array, *,
                            n_heads: int, n_kv_heads: int, head_dim: int,
                            rope_variant: str, rope_theta: float,
                            mrope_sections, window: int = 0,
-                           cross: bool = False):
+                           cross: bool = False,
+                           policy: Optional[PrecisionPolicy] = None):
     """One decode step.  x: (B, 1, d); position: (B,) absolute position;
     write_idx: (B,) slot to write KV into (ring index for sliding caches).
+
+    ``cache_k``/``cache_v`` are float arrays or ``Int8KV`` pairs; int8
+    caches get the new K/V quantized per (entry, head) on write and the
+    whole cache dequantized for the attention core.  A fake_quant policy
+    mirrors that bit-exactly on a float cache (quantize→dequantize at
+    write time), which is what makes int8 serving testable token-exact.
 
     Returns (out, new_cache_k, new_cache_v, new_cache_positions).
     """
     b = x.shape[0]
-    q = (x @ p["wq"].astype(x.dtype)).reshape(b, 1, n_heads, head_dim)
+    q = quant_matmul(x, p["wq"], policy=policy).reshape(
+        b, 1, n_heads, head_dim)
     if cross:
         # Cross attention: cache holds encoder KV; nothing is written.
-        o = decode_attention(q, cache_k, cache_v,
+        o = decode_attention(q, kv_read(cache_k, x.dtype),
+                             kv_read(cache_v, x.dtype),
                              jnp.full((b,), 2 ** 30, jnp.int32),
                              cache_positions)
-        out = o.reshape(b, 1, n_heads * head_dim) @ p["wo"].astype(x.dtype)
+        out = quant_matmul(o.reshape(b, 1, n_heads * head_dim), p["wo"],
+                           policy=policy)
         return out, cache_k, cache_v, cache_positions
-    k = (x @ p["wk"].astype(x.dtype)).reshape(b, 1, n_kv_heads, head_dim)
-    v = (x @ p["wv"].astype(x.dtype)).reshape(b, 1, n_kv_heads, head_dim)
+    k = quant_matmul(x, p["wk"], policy=policy).reshape(
+        b, 1, n_kv_heads, head_dim)
+    v = quant_matmul(x, p["wv"], policy=policy).reshape(
+        b, 1, n_kv_heads, head_dim)
     if rope_variant == "mrope":
         pos3 = jnp.broadcast_to(position[:, None, None], (b, 1, 3))
         q = apply_mrope(q, pos3, rope_theta, mrope_sections)
@@ -365,28 +409,38 @@ def attention_decode_layer(p: dict, x: jax.Array, position: jax.Array,
             lambda c, n, i: lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
         )(cache, new, write_idx)
 
-    cache_k = upd(cache_k, k)
-    cache_v = upd(cache_v, v)
+    if isinstance(cache_k, Int8KV):
+        qk, qv = quant_kv(k), quant_kv(v)
+        cache_k = Int8KV(upd(cache_k.q, qk.q), upd(cache_k.scale, qk.scale))
+        cache_v = Int8KV(upd(cache_v.q, qv.q), upd(cache_v.scale, qv.scale))
+    else:
+        if (policy is not None and policy.kv_cache == "int8"
+                and policy.compute == "fake_quant"):
+            k = dequant_kv(quant_kv(k), k.dtype)
+            v = dequant_kv(quant_kv(v), v.dtype)
+        cache_k = upd(cache_k, k)
+        cache_v = upd(cache_v, v)
     cache_positions = jax.vmap(
         lambda cp, pos, i: lax.dynamic_update_slice_in_dim(
             cp, pos[None], i, axis=0)
     )(cache_positions, position, write_idx)
-    cache_k = constrain(cache_k, ("act_batch", "act_cache_seq",
-                                  "act_kv_heads", None))
-    cache_v = constrain(cache_v, ("act_batch", "act_cache_seq",
-                                  "act_kv_heads", None))
-    o = decode_attention(q, cache_k, cache_v, position, cache_positions,
-                         window=window)
-    out = o.reshape(b, 1, n_heads * head_dim) @ p["wo"].astype(x.dtype)
+    cache_k = _constrain_decode_kv(cache_k)
+    cache_v = _constrain_decode_kv(cache_v)
+    o = decode_attention(q, kv_read(cache_k, x.dtype),
+                         kv_read(cache_v, x.dtype), position,
+                         cache_positions, window=window)
+    out = quant_matmul(o.reshape(b, 1, n_heads * head_dim), p["wo"],
+                       policy=policy)
     return out, cache_k, cache_v, cache_positions
 
 
 # ---------------------------------------------------------------------------
 # MLP
 # ---------------------------------------------------------------------------
-def swiglu_mlp(p: dict, x: jax.Array) -> jax.Array:
-    gate = x @ p["w_gate"].astype(x.dtype)
-    up = x @ p["w_up"].astype(x.dtype)
+def swiglu_mlp(p: dict, x: jax.Array,
+               policy: Optional[PrecisionPolicy] = None) -> jax.Array:
+    gate = quant_matmul(x, p["w_gate"], policy=policy)
+    up = quant_matmul(x, p["w_up"], policy=policy)
     h = jax.nn.silu(gate) * up
     h = constrain(h, ("act_batch", "act_seq", "act_ff"))
-    return h @ p["w_down"].astype(h.dtype)
+    return quant_matmul(h, p["w_down"], policy=policy)

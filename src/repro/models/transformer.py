@@ -21,6 +21,7 @@ from jax import lax
 
 from repro import flags
 from repro.core.arch import ArchConfig
+from repro.core.quantize import Int8KV, PrecisionPolicy, maybe_quant_kv
 from repro.models import ssm as ssm_mod
 from repro.models.layers import (attention_decode_layer, attention_layer,
                                  rms_norm, swiglu_mlp)
@@ -31,16 +32,20 @@ from repro.sharding.policy import constrain
 def maybe_cast_params(params, cfg):
     """bf16_params flag: cast >=2D f32 masters to the activation dtype
     once at step entry, so FSDP all-gathers move bf16 (not f32 masters).
-    1D scales / ssm dynamics stay f32."""
+    1D scales / ssm dynamics / QTensor dequant scales stay f32."""
     if not flags.get("bf16_params"):
         return params
     dt = cfg.activation_dtype
+    from repro.core.quantize import QTensor
 
     def cast(leaf):
+        if isinstance(leaf, QTensor):
+            return leaf
         if leaf.ndim >= 2 and leaf.dtype == jnp.float32:
             return leaf.astype(dt)
         return leaf
-    casted = jax.tree.map(cast, params)
+    casted = jax.tree.map(cast, params,
+                          is_leaf=lambda x: isinstance(x, QTensor))
     # Barrier: without it XLA sinks the convert into the layer scan and
     # the FSDP all-gather still moves the f32 master (measured: zero
     # collective-byte change).  With it, the sharded bf16 copy
@@ -111,20 +116,21 @@ def _attn_kwargs(cfg: ArchConfig, window: int = 0):
 
 
 def dense_block(cfg: ArchConfig, p, x, positions, *, window=0,
-                causal=True, collect_kv=False):
+                causal=True, collect_kv=False, policy=None):
     h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
     attn_out, kv = attention_layer(p["attn"], h, positions, causal=causal,
-                                   **_attn_kwargs(cfg, window))
+                                   policy=policy, **_attn_kwargs(cfg, window))
     x = x + attn_out
     h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
-    x = x + swiglu_mlp(p["mlp"], h)
+    x = x + swiglu_mlp(p["mlp"], h, policy)
     x = constrain(x, ("act_batch", "act_res_seq", "act_dmodel"))
     return (x, kv) if collect_kv else (x, None)
 
 
-def moe_block(cfg: ArchConfig, p, x, positions, *, collect_kv=False):
+def moe_block(cfg: ArchConfig, p, x, positions, *, collect_kv=False,
+              policy=None):
     h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
-    attn_out, kv = attention_layer(p["attn"], h, positions,
+    attn_out, kv = attention_layer(p["attn"], h, positions, policy=policy,
                                    **_attn_kwargs(cfg))
     x = x + attn_out
     h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
@@ -144,23 +150,23 @@ def mamba_block(cfg: ArchConfig, p, x, state=None):
 
 
 def dense_block_decode(cfg: ArchConfig, p, x, position, cache_k, cache_v,
-                       cache_pos, write_idx, *, window=0):
+                       cache_pos, write_idx, *, window=0, policy=None):
     h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
     attn_out, ck, cv, cp = attention_decode_layer(
         p["attn"], h, position, cache_k, cache_v, cache_pos, write_idx,
-        **_attn_kwargs(cfg, window))
+        policy=policy, **_attn_kwargs(cfg, window))
     x = x + attn_out
     h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
-    x = x + swiglu_mlp(p["mlp"], h)
+    x = x + swiglu_mlp(p["mlp"], h, policy)
     return x, ck, cv, cp
 
 
 def moe_block_decode(cfg: ArchConfig, p, x, position, cache_k, cache_v,
-                     cache_pos, write_idx):
+                     cache_pos, write_idx, policy=None):
     h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
     attn_out, ck, cv, cp = attention_decode_layer(
         p["attn"], h, position, cache_k, cache_v, cache_pos, write_idx,
-        **_attn_kwargs(cfg))
+        policy=policy, **_attn_kwargs(cfg))
     x = x + attn_out
     h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
     x = x + moe_layer(p["moe"], h, cfg)
@@ -179,7 +185,8 @@ def mamba_block_decode(cfg: ArchConfig, p, x, state):
 # Trunk (pattern-dispatched scans)
 # ---------------------------------------------------------------------------
 def trunk_forward(cfg: ArchConfig, params, x, positions, *,
-                  remat: str = "none", collect_cache: bool = False):
+                  remat: str = "none", collect_cache: bool = False,
+                  policy: Optional[PrecisionPolicy] = None):
     """Run all blocks.  Returns (x, cache_entries | None)."""
     pat = layer_pattern(cfg)
     caches: Dict[str, jax.Array] = {}
@@ -189,7 +196,8 @@ def trunk_forward(cfg: ArchConfig, params, x, positions, *,
 
         def body(h, p):
             fn = moe_block if is_moe else dense_block
-            h, kv = fn(cfg, p, h, positions, collect_kv=collect_cache)
+            h, kv = fn(cfg, p, h, positions, collect_kv=collect_cache,
+                       policy=policy)
             return h, kv
         body = _maybe_remat(body, remat)
         x, kvs = lax.scan(body, x, params["blocks"])
@@ -210,7 +218,7 @@ def trunk_forward(cfg: ArchConfig, params, x, positions, *,
 
         def local_body(h, p):
             h, kv = dense_block(cfg, p, h, positions, window=w,
-                                collect_kv=collect_cache)
+                                collect_kv=collect_cache, policy=policy)
             return h, kv
 
         def group_body(h, p):
@@ -218,7 +226,8 @@ def trunk_forward(cfg: ArchConfig, params, x, positions, *,
                                    h, p["local"])
             h, global_kv = _maybe_remat(
                 lambda hh, pp: dense_block(cfg, pp, hh, positions,
-                                           collect_kv=collect_cache),
+                                           collect_kv=collect_cache,
+                                           policy=policy),
                 remat)(h, p["global"])
             return h, (local_kv, global_kv)
 
@@ -248,7 +257,8 @@ def trunk_forward(cfg: ArchConfig, params, x, positions, *,
             h, states = lax.scan(_maybe_remat(mamba_body, remat), h, p)
             h, kv = _maybe_remat(
                 lambda hh, pp: dense_block(cfg, pp, hh, positions,
-                                           collect_kv=collect_cache),
+                                           collect_kv=collect_cache,
+                                           policy=policy),
                 remat)(h, shared)
             return h, (states, kv)
 
@@ -264,7 +274,8 @@ def trunk_forward(cfg: ArchConfig, params, x, positions, *,
 
 
 def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
-                 write_full, write_local):
+                 write_full, write_local,
+                 policy: Optional[PrecisionPolicy] = None):
     """One-token pass through all blocks, updating the cache pytree."""
     pat = layer_pattern(cfg)
     new_cache = dict(cache)
@@ -276,7 +287,7 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
             p, ck, cv = pc
             fn = moe_block_decode if is_moe else dense_block_decode
             h, ck, cv, cp = fn(cfg, p, h, position, ck, cv,
-                               cache["full_pos"], write_full)
+                               cache["full_pos"], write_full, policy=policy)
             return h, (ck, cv)
         x, (ks, vs) = lax.scan(body, x, (params["blocks"],
                                          cache["k"], cache["v"]))
@@ -298,7 +309,7 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
             p, ck, cv = pc
             h, ck, cv, cp = dense_block_decode(
                 cfg, p, h, position, ck, cv, cache["local_pos"],
-                write_local, window=w)
+                write_local, window=w, policy=policy)
             return h, (ck, cv)
 
         def group_body(h, pc):
@@ -306,7 +317,7 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
             h, (lks, lvs) = lax.scan(local_body, h, (p["local"], lk, lv))
             h, gk, gv, _ = dense_block_decode(
                 cfg, p["global"], h, position, gk, gv,
-                cache["full_pos"], write_full)
+                cache["full_pos"], write_full, policy=policy)
             return h, (lks, lvs, gk, gv)
 
         x, (lks, lvs, gks, gvs) = lax.scan(
@@ -336,7 +347,7 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
             h, states = lax.scan(mamba_body, h, (p, tuple(st)))
             h, ck, cv, _ = dense_block_decode(
                 cfg, shared, h, position, ck, cv,
-                cache["full_pos"], write_full)
+                cache["full_pos"], write_full, policy=policy)
             return h, (states, ck, cv)
 
         x, (states, ks, vs) = lax.scan(
@@ -366,7 +377,8 @@ def default_positions(cfg: ArchConfig, batch: int, seq: int) -> jax.Array:
 # Entry points
 # ---------------------------------------------------------------------------
 def forward_train(cfg: ArchConfig, params, inputs: Dict[str, jax.Array], *,
-                  remat: str = "full"):
+                  remat: str = "full",
+                  policy: Optional[PrecisionPolicy] = None):
     """inputs: tokens (B,S) int32 OR embeddings (B,S,d); labels (B,S)."""
     params = maybe_cast_params(params, cfg)
     if "embeddings" in inputs:
@@ -380,13 +392,17 @@ def forward_train(cfg: ArchConfig, params, inputs: Dict[str, jax.Array], *,
     positions = inputs.get("positions")
     if positions is None:
         positions = default_positions(cfg, b, s)
-    x, _ = trunk_forward(cfg, params, x, positions, remat=remat)
+    x, _ = trunk_forward(cfg, params, x, positions, remat=remat,
+                         policy=policy)
     logits = unembed(params, x, cfg)
     return lm_loss(logits, inputs["labels"], cfg.vocab_size)
 
 
-def forward_prefill(cfg: ArchConfig, params, inputs: Dict[str, jax.Array]):
-    """Returns (last_token_logits, cache)."""
+def forward_prefill(cfg: ArchConfig, params, inputs: Dict[str, jax.Array],
+                    policy: Optional[PrecisionPolicy] = None):
+    """Returns (last_token_logits, cache).  ``policy`` selects the KV
+    cache representation (float / Int8KV / fake-quant float) and the
+    matmul compute mode for QTensor params."""
     params = maybe_cast_params(params, cfg)
     if "embeddings" in inputs:
         x = inputs["embeddings"].astype(cfg.activation_dtype)
@@ -398,14 +414,16 @@ def forward_prefill(cfg: ArchConfig, params, inputs: Dict[str, jax.Array]):
     positions = inputs.get("positions")
     if positions is None:
         positions = default_positions(cfg, b, s)
-    x, caches = trunk_forward(cfg, params, x, positions, collect_cache=True)
+    x, caches = trunk_forward(cfg, params, x, positions, collect_cache=True,
+                              policy=policy)
     logits = unembed(params, x[:, -1:, :], cfg)[:, 0]
-    cache = _cache_from_prefill(cfg, caches, positions, b, s)
+    cache = _cache_from_prefill(cfg, caches, positions, b, s, policy=policy)
     return logits, cache
 
 
 def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
-                   position: jax.Array, write_idx: Optional[jax.Array] = None):
+                   position: jax.Array, write_idx: Optional[jax.Array] = None,
+                   policy: Optional[PrecisionPolicy] = None):
     """token: (B,) int32; position: (B,) absolute index of this token.
 
     ``write_idx`` (B,) is the cache slot row index to write KV into; it
@@ -421,7 +439,7 @@ def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
     write_local = position % w if w else write_full
     x, new_cache = trunk_decode(cfg, params, x, position, cache,
                                 write_full=write_full,
-                                write_local=write_local)
+                                write_local=write_local, policy=policy)
     logits = unembed(params, x, cfg)[:, 0]
     # position bookkeeping lives outside trunk_decode (shared across layers)
     if "full_pos" in new_cache:
@@ -487,7 +505,8 @@ def _constrain_kv_cache(arr: jax.Array) -> jax.Array:
     return constrain(arr, axes)
 
 
-def _cache_from_prefill(cfg: ArchConfig, caches, positions, b, s):
+def _cache_from_prefill(cfg: ArchConfig, caches, positions, b, s,
+                        policy: Optional[PrecisionPolicy] = None):
     caches = {k: (_constrain_kv_cache(v) if k.split("_")[-1] in ("k", "v")
                   else v)
               for k, v in caches.items()}
@@ -516,15 +535,28 @@ def _cache_from_prefill(cfg: ArchConfig, caches, positions, b, s):
         cache["ssm"] = caches["ssm"]
         cache["attn_k"], cache["attn_v"] = caches["attn_k"], caches["attn_v"]
         cache["full_pos"] = pos1d
+    if policy is not None and policy.kv_cache == "int8":
+        # Quantize AFTER ring reconstruction (gather commutes with
+        # per-entry quantization) so one code path covers every layout.
+        cache = {key: (maybe_quant_kv(policy, arr)
+                       if key.split("_")[-1] in ("k", "v") else arr)
+                 for key, arr in cache.items()}
     return cache
+
+
+def _grow_axis(arr: jax.Array, axis: int, extra: int) -> jax.Array:
+    pad = [(0, 0)] * arr.ndim
+    pad[axis] = (0, extra)
+    return jnp.pad(arr, pad)
 
 
 def grow_cache(cfg: ArchConfig, cache, extra: int):
     """Extend full-attention cache seq dims by ``extra`` slots (padded)."""
     def grow(name, arr):
-        pad = [(0, 0)] * arr.ndim
-        pad[-3] = (0, extra)
-        return jnp.pad(arr, pad)
+        if isinstance(arr, Int8KV):
+            return Int8KV(_grow_axis(arr.q, -3, extra),
+                          _grow_axis(arr.scale, -2, extra))
+        return _grow_axis(arr, -3, extra)
 
     out = dict(cache)
     for key in ("k", "v", "global_k", "global_v", "attn_k", "attn_v"):

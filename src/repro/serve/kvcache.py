@@ -18,47 +18,64 @@ serving-side pieces:
 
 Validity is decided *only* by stored positions (−1 = empty), so a slot
 row can be recycled between decode steps without touching the K/V bytes.
+
+Every entry point is precision-aware (``PrecisionPolicy``): an int8
+policy makes the KV leaves ``Int8KV`` pairs — int8 values plus one f32
+scale per (entry, head) — and the slot API splices/releases/sizes the
+paired pytree; ``decode_cache_nbytes`` measures the HBM delta.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core.arch import ArchConfig, ShapeConfig
+from repro.core.quantize import Int8KV, PrecisionPolicy
 from repro.models.transformer import grow_cache  # noqa: F401  (re-export)
 
 
 def kv_cache_bytes(cfg: ArchConfig, batch: int, seq_len: int,
-                   dtype_bytes: int = 2) -> int:
-    """Global KV/state cache footprint for one decode session."""
+                   dtype_bytes: int = 2, *,
+                   precision: str = "float") -> int:
+    """Global KV/state cache footprint for one decode session.
+
+    ``precision="int8"`` prices the Int8KV layout: 1 byte per value plus
+    one f32 scale per (entry, head) vector of ``head_dim`` values —
+    attention KV only; SSM recurrent state stays float either way.
+    """
     hd = cfg.resolved_head_dim
+    # bytes per stored attention-KV scalar; the int8 layout adds one f32
+    # scale per head-vector of hd values.  SSM conv/recurrent state stays
+    # float under every precision.
+    kv_bytes = (hd + 4) / hd if precision == "int8" else dtype_bytes
     if cfg.family == "ssm":
         conv = batch * (cfg.d_conv - 1) * cfg.d_inner * dtype_bytes
         h = batch * cfg.d_inner * cfg.ssm_state * 4
-        return cfg.n_layers * (conv + h)
+        return int(cfg.n_layers * (conv + h))
     if cfg.family == "hybrid":
         nh = cfg.resolved_ssm_heads
         hp = cfg.d_inner // nh
         conv = batch * (cfg.d_conv - 1) * cfg.d_inner * dtype_bytes
         h = batch * nh * hp * cfg.ssm_state * 4
         n_attn = cfg.n_layers // max(cfg.attn_every, 1)
-        kv = n_attn * 2 * batch * seq_len * cfg.n_kv_heads * hd * dtype_bytes
-        return cfg.n_layers * (conv + h) + kv
-    per_layer_kv = 2 * batch * cfg.n_kv_heads * hd * dtype_bytes
+        kv = n_attn * 2 * batch * seq_len * cfg.n_kv_heads * hd * kv_bytes
+        return int(cfg.n_layers * (conv + h) + kv)
+    per_layer_kv = 2 * batch * cfg.n_kv_heads * hd * kv_bytes
     if cfg.sliding_window and cfg.local_global_ratio:
         r = cfg.local_global_ratio
         n_global = cfg.n_layers // (r + 1)
         n_local = cfg.n_layers - n_global
-        return (n_global * per_layer_kv * seq_len
-                + n_local * per_layer_kv * min(cfg.sliding_window, seq_len))
+        return int(n_global * per_layer_kv * seq_len
+                   + n_local * per_layer_kv * min(cfg.sliding_window, seq_len))
     n_layers = cfg.n_layers + (cfg.n_enc_layers if cfg.is_encdec else 0) * 0
     total = n_layers * per_layer_kv * seq_len
     if cfg.is_encdec:
         total += cfg.n_layers * per_layer_kv * (seq_len // cfg.enc_seq_divisor)
-    return total
+    return int(total)
 
 
 # ---------------------------------------------------------------------------
@@ -68,17 +85,27 @@ def _is_kv_key(key: str) -> bool:
     return key.split("_")[-1] in ("k", "v")
 
 
-def abstract_decode_cache(cfg: ArchConfig, slots: int, capacity: int):
-    """ShapeDtypeStructs of a ``slots`` × ``capacity`` decode cache."""
+def abstract_decode_cache(cfg: ArchConfig, slots: int, capacity: int,
+                          policy: Optional[PrecisionPolicy] = None):
+    """ShapeDtypeStructs of a ``slots`` × ``capacity`` decode cache.
+    With an int8 ``policy`` the KV leaves come back as Int8KV pairs."""
     from repro.models.api import abstract_cache
     shape = ShapeConfig("serve_alloc", seq_len=capacity, global_batch=slots,
                         kind="prefill")
-    return abstract_cache(cfg, shape)
+    return abstract_cache(cfg, shape, policy)
 
 
-def alloc_decode_cache(cfg: ArchConfig, slots: int, capacity: int):
+def decode_cache_nbytes(cache) -> int:
+    """HBM footprint of a (concrete or abstract) decode-cache pytree —
+    every leaf: KV values, Int8KV scales, position bookkeeping."""
+    return sum(int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree.leaves(cache))
+
+
+def alloc_decode_cache(cfg: ArchConfig, slots: int, capacity: int,
+                       policy: Optional[PrecisionPolicy] = None):
     """Concrete all-empty decode cache: zeros, positions −1 (invalid)."""
-    abs_cache = abstract_decode_cache(cfg, slots, capacity)
+    abs_cache = abstract_decode_cache(cfg, slots, capacity, policy)
 
     def init(key_path, sds):
         name = key_path[0].key if hasattr(key_path[0], "key") else None
@@ -113,7 +140,9 @@ def write_slot(big_cache: Dict[str, Any], small_cache: Dict[str, Any],
     K/V rows are written over indices ``[0, bucket)``; the position row is
     fully rewritten (−1 beyond the bucket) so whatever the slot held
     before — a finished request's KV, garbage writes from its idle steps —
-    is invalidated in one shot.  Jit this per prefill bucket shape.
+    is invalidated in one shot.  Int8KV rows splice as a pair: values at
+    their (stacked) batch axis, the per-entry scales one axis short.
+    Jit this per prefill bucket shape.
     """
     out = dict(big_cache)
     for key, big in big_cache.items():
@@ -124,7 +153,13 @@ def write_slot(big_cache: Dict[str, Any], small_cache: Dict[str, Any],
             out[key] = lax.dynamic_update_slice(
                 wiped, small.astype(big.dtype), (slot, 0))
         elif _is_kv_key(key):
-            out[key] = _splice(big, small, slot, big.ndim - 4)
+            if isinstance(big, Int8KV):
+                out[key] = Int8KV(
+                    _splice(big.q, small.q, slot, big.q.ndim - 4),
+                    _splice(big.scale, small.scale, slot,
+                            big.scale.ndim - 3))
+            else:
+                out[key] = _splice(big, small, slot, big.ndim - 4)
         else:  # recurrent-state pytrees (ssm): batch axis inferred per leaf
             out[key] = jax.tree.map(
                 lambda b, s: _splice(

@@ -1,5 +1,9 @@
 """serve_step factories: prefill and one-token decode, policy-wrapped.
 
+Each factory takes an optional ``PrecisionPolicy`` (core/quantize):
+the step closes over it, so float and int8 servers lower distinct
+(but same-signature) executables.
+
 ``decode_*`` shapes lower ``decode_step`` (one new token against a KV
 cache of seq_len), ``prefill_*`` shapes lower ``prefill_step`` — per the
 assignment's cell semantics.
@@ -34,11 +38,11 @@ def _context(fn, rules, mesh):
 
 
 def make_prefill_step(cfg: ArchConfig, *, rules: Optional[AxisRules] = None,
-                      mesh=None):
+                      mesh=None, policy=None):
     fns = model_fns(cfg)
 
     def prefill_step(params, inputs):
-        logits, cache = fns.forward_prefill(cfg, params, inputs)
+        logits, cache = fns.forward_prefill(cfg, params, inputs, policy)
         # greedy next token (sampling lives host-side in the server loop)
         next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_token, logits, cache
@@ -47,12 +51,12 @@ def make_prefill_step(cfg: ArchConfig, *, rules: Optional[AxisRules] = None,
 
 
 def make_decode_step(cfg: ArchConfig, *, rules: Optional[AxisRules] = None,
-                     mesh=None):
+                     mesh=None, policy=None):
     fns = model_fns(cfg)
 
     def decode_step(params, cache, token, position):
         logits, new_cache = fns.forward_decode(cfg, params, cache, token,
-                                               position)
+                                               position, policy=policy)
         next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_token, logits, new_cache
 
@@ -60,13 +64,20 @@ def make_decode_step(cfg: ArchConfig, *, rules: Optional[AxisRules] = None,
 
 
 def make_slot_decode_step(cfg: ArchConfig, *,
-                          rules: Optional[AxisRules] = None, mesh=None):
-    """Decode step with slot-addressed cache writes (continuous batching)."""
+                          rules: Optional[AxisRules] = None, mesh=None,
+                          policy=None):
+    """Decode step with slot-addressed cache writes (continuous batching).
+
+    ``policy`` (``PrecisionPolicy``) selects the weight/activation/KV
+    precision the step lowers with — it is part of the compiled
+    artifact's identity, not a runtime argument.
+    """
     fns = model_fns(cfg)
 
     def decode_step(params, cache, token, position, write_idx):
         logits, new_cache = fns.forward_decode(cfg, params, cache, token,
-                                               position, write_idx)
+                                               position, write_idx,
+                                               policy=policy)
         next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_token, logits, new_cache
 

@@ -14,6 +14,12 @@ Two schedulers over the same model serve steps:
   and decodes until its slowest member finishes; short requests block
   behind long ones.  Kept as the benchmark control.
 
+Both engines accept ``precision="float" | "int8"`` (paper C5 threaded
+end-to-end): int8 wraps projection weights in QTensor once at
+construction, serves through the quant-aware matmul entry point, and
+keeps the decode cache as Int8KV — ≥2× KV HBM, token-exact against the
+fake-quant float reference (docs/quantization.md).
+
 Both left-pad prompts into the prefill bucket with position −1 marking
 pad entries, which the attention masks treat as never-attendable, so
 batched serving is token-exact versus an unpadded single-request decode
@@ -31,8 +37,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arch import ArchConfig
-from repro.serve.kvcache import (alloc_decode_cache, grow_cache,
-                                 release_slot, write_slot)
+from repro.core.quantize import policy_for, quantize_model_params
+from repro.serve.kvcache import (alloc_decode_cache, decode_cache_nbytes,
+                                 grow_cache, release_slot, write_slot)
 from repro.serve.scheduler import BucketPolicy, SlotScheduler
 from repro.serve.serve_step import make_prefill_step, make_slot_decode_step
 
@@ -96,10 +103,14 @@ def _summarize(served: List[Request], wall: float, *, engine: str,
 
 
 class _ServerBase:
-    def __init__(self, cfg: ArchConfig, params):
+    def __init__(self, cfg: ArchConfig, params, precision: str = "float"):
         _check_supported(cfg)
         self.cfg = cfg
-        self.params = params
+        self.precision = precision
+        self.prec = policy_for(precision)
+        # int8: projection weights become QTensor leaves once, up front —
+        # the serving hot loop never sees a float weight again.
+        self.params = quantize_model_params(params, self.prec)
         self._next_rid = 0
         self.requests: Dict[int, Request] = {}
         self.metrics: Dict[str, float] = {}
@@ -141,8 +152,9 @@ class ContinuousBatchServer(_ServerBase):
                  eos_id: Optional[int] = None,
                  use_artifact: bool = False,
                  batch_size: Optional[int] = None,
-                 prompt_len: Optional[int] = None):
-        super().__init__(cfg, params)
+                 prompt_len: Optional[int] = None,
+                 precision: str = "float"):
+        super().__init__(cfg, params, precision)
         self.n_slots = int(slots or batch_size or 4)
         self.policy = BucketPolicy(buckets or (prompt_len or 32,))
         self.max_new = int(max_new_tokens)
@@ -150,7 +162,7 @@ class ContinuousBatchServer(_ServerBase):
         self.capacity = self.policy.max_bucket + self.max_new_cap
         self.eos_id = eos_id
         self.sched = SlotScheduler(self.n_slots)
-        self.prefill = jax.jit(make_prefill_step(cfg))
+        self.prefill = jax.jit(make_prefill_step(cfg, policy=self.prec))
         # the cache is dead after every call (immediately reassigned):
         # donate it so steps update rows in place instead of copying the
         # whole KV allocation per token
@@ -160,12 +172,15 @@ class ContinuousBatchServer(_ServerBase):
         if use_artifact:
             from repro.core.eon_compiler import compile_serve_decode
             self.artifact = compile_serve_decode(
-                cfg, params, slots=self.n_slots, capacity=self.capacity)
+                cfg, self.params, slots=self.n_slots, capacity=self.capacity,
+                policy=self.prec)
             self.decode = self.artifact.rehydrate()
         else:
-            self.decode = jax.jit(make_slot_decode_step(cfg),
-                                  donate_argnums=(1,))
-        self.cache = alloc_decode_cache(cfg, self.n_slots, self.capacity)
+            self.decode = jax.jit(
+                make_slot_decode_step(cfg, policy=self.prec),
+                donate_argnums=(1,))
+        self.cache = alloc_decode_cache(cfg, self.n_slots, self.capacity,
+                                        self.prec)
         # host mirror of the last emitted token per slot (decode feed)
         self._cur = np.zeros((self.n_slots,), np.int32)
 
@@ -253,6 +268,8 @@ class ContinuousBatchServer(_ServerBase):
                                   decode_steps=decode_steps,
                                   prefills=prefills, occupancy=occupancy,
                                   n_slots=self.n_slots)
+        self.metrics["precision"] = self.precision
+        self.metrics["kv_cache_bytes"] = decode_cache_nbytes(self.cache)
         if self.artifact is not None:
             self.metrics["artifact_bytes"] = self.artifact.artifact_bytes
         return self.metrics
@@ -266,16 +283,19 @@ class StaticBatchServer(_ServerBase):
     """
 
     def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 4,
-                 prompt_len: int = 32, max_new_tokens: int = 16):
-        super().__init__(cfg, params)
+                 prompt_len: int = 32, max_new_tokens: int = 16,
+                 precision: str = "float"):
+        super().__init__(cfg, params, precision)
         self.batch_size = int(batch_size)
         self.prompt_len = int(prompt_len)
         self.max_new = int(max_new_tokens)
         self.max_new_cap = self.max_new
         self.queue: List[Request] = []
-        self.prefill = jax.jit(make_prefill_step(cfg))
-        self.decode = jax.jit(make_slot_decode_step(cfg),
-                              donate_argnums=(1,))
+        self._cache_bytes = 0
+        self.prefill = jax.jit(make_prefill_step(cfg, policy=self.prec))
+        self.decode = jax.jit(
+            make_slot_decode_step(cfg, policy=self.prec),
+            donate_argnums=(1,))
 
     def submit(self, prompts: List[np.ndarray],
                max_new_tokens: Union[int, Sequence[int], None] = None
@@ -289,6 +309,7 @@ class StaticBatchServer(_ServerBase):
         served: List[Request] = []
         decode_steps = 0
         prefills = 0
+        self._cache_bytes = 0
         while self.queue:
             batch = self.queue[:self.batch_size]
             self.queue = self.queue[self.batch_size:]
@@ -305,6 +326,8 @@ class StaticBatchServer(_ServerBase):
             prefills += 1
             horizon = max(r.max_new_tokens for r in batch) - 1
             cache = grow_cache(self.cfg, cache, horizon + 1)
+            self._cache_bytes = max(self._cache_bytes,
+                                    decode_cache_nbytes(cache))
             now = time.perf_counter()
             ntok = np.asarray(next_tok)
             for i, r in enumerate(batch):
@@ -336,6 +359,9 @@ class StaticBatchServer(_ServerBase):
         self.metrics = _summarize(served, wall, engine="static",
                                   decode_steps=decode_steps,
                                   prefills=prefills)
+        self.metrics["precision"] = self.precision
+        if self._cache_bytes:
+            self.metrics["kv_cache_bytes"] = self._cache_bytes
         return self.metrics
 
 

@@ -33,6 +33,73 @@ def test_int8_matmul_shapes(m, k, n, bm, bn, bk):
     np.testing.assert_allclose(out, expect, rtol=1e-6)
 
 
+@pytest.mark.parametrize("m,k,n", [
+    (3, 70, 5),        # everything ragged, smaller than one tile
+    (100, 200, 96),    # M/K ragged vs 64-blocks
+    (130, 300, 190),   # every dim crosses a tile boundary mid-block
+    (1, 64, 1),        # decode-shaped: single row/col
+    (257, 129, 65),    # one past a tile edge in every dim
+])
+def test_int8_matmul_ragged_parity(m, k, n):
+    """Pallas interpret == int32-exact ref on non-multiple-of-block
+    shapes: the kernel zero-pads up to the tile grid (zero int8 entries
+    add nothing to the int32 dot) and slices the output back."""
+    rng = np.random.RandomState(11)
+    xq = jnp.asarray(rng.randint(-127, 128, (m, k)), jnp.int8)
+    wq = jnp.asarray(rng.randint(-127, 128, (k, n)), jnp.int8)
+    xs = jnp.asarray(rng.uniform(1e-3, 2e-2, (m,)), jnp.float32)
+    ws = jnp.asarray(rng.uniform(1e-3, 2e-2, (n,)), jnp.float32)
+    out = im_kernel(xq, wq, xs, ws, bm=64, bn=64, bk=64, interpret=True)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(out, ref.int8_matmul_ref(xq, wq, xs, ws),
+                               rtol=1e-6)
+
+
+def test_kernel_path_flag_pins_dispatch():
+    """repro.flags kernel_path pins every ops dispatch (the CI lever for
+    running the suite through Pallas interpret mode); per-call force
+    still wins."""
+    from repro import flags
+    old = flags.get("kernel_path")
+    try:
+        flags.set_flags(kernel_path="interpret")
+        assert ops.resolve_path() == "interpret"
+        assert ops.resolve_path("ref") == "ref"   # per-call force wins
+        rng = np.random.RandomState(12)
+        xq = jnp.asarray(rng.randint(-127, 128, (16, 96)), jnp.int8)
+        wq = jnp.asarray(rng.randint(-127, 128, (96, 40)), jnp.int8)
+        xs = jnp.asarray(rng.uniform(1e-3, 2e-2, (16,)), jnp.float32)
+        ws = jnp.asarray(rng.uniform(1e-3, 2e-2, (40,)), jnp.float32)
+        out = ops.int8_matmul(xq, wq, xs, ws)     # runs interpret-mode pallas
+        np.testing.assert_allclose(out, ref.int8_matmul_ref(xq, wq, xs, ws),
+                                   rtol=1e-6)
+        with pytest.raises(ValueError):
+            flags.set_flags(kernel_path="cuda")
+    finally:
+        flags.set_flags(kernel_path=old)
+    assert ops.resolve_path("pallas") == "pallas"
+
+
+def test_kernel_path_env_seed(monkeypatch):
+    """$REPRO_KERNEL_PATH seeds the flag at import (the suite-wide CI
+    switch)."""
+    import importlib
+
+    from repro import flags
+    old = flags.get("kernel_path")
+    try:
+        monkeypatch.setenv("REPRO_KERNEL_PATH", "interpret")
+        importlib.reload(flags)
+        assert flags.get("kernel_path") == "interpret"
+        monkeypatch.setenv("REPRO_KERNEL_PATH", "metal")
+        with pytest.raises(ValueError):
+            importlib.reload(flags)
+    finally:
+        monkeypatch.delenv("REPRO_KERNEL_PATH", raising=False)
+        importlib.reload(flags)
+        flags.set_flags(kernel_path=old)
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 4),
        st.integers(0, 2 ** 31 - 1))

@@ -196,3 +196,135 @@ def test_slot_cache_write_release_isolated(setup):
 def test_batchserver_alias_is_continuous():
     from repro.serve.server import BatchServer
     assert BatchServer is ContinuousBatchServer
+
+
+# ---------------------------------------------------------------------------
+# Slot lifecycle: alloc → write → release → re-admit, float and int8
+# ---------------------------------------------------------------------------
+from repro.core import quantize as qz  # noqa: E402
+
+
+def test_slot_cache_write_release_isolated_int8(setup):
+    """The int8 cache (Int8KV pairs) honors the same slot API contract:
+    one row spliced, neighbors untouched, release invalidates positions
+    while the paired q/scale bytes stay."""
+    cfg, params = setup
+    cache = alloc_decode_cache(cfg, slots=3, capacity=12, policy=qz.INT8)
+    assert isinstance(cache["k"], qz.Int8KV)
+    fns = api.model_fns(cfg)
+    toks = jnp.asarray(np.arange(8, dtype=np.int32)[None, :])
+    _, small = fns.forward_prefill(cfg, params, {"tokens": toks}, qz.INT8)
+    assert isinstance(small["k"], qz.Int8KV)
+    cache2 = write_slot(cache, small, 1)
+    fp = np.asarray(cache2["full_pos"])
+    assert np.all(fp[[0, 2]] == -1), "neighbor rows disturbed"
+    assert list(fp[1][:8]) == list(range(8))
+    q2, q0 = np.asarray(cache2["k"].q), np.asarray(cache["k"].q)
+    s2 = np.asarray(cache2["k"].scale)
+    assert np.array_equal(q2[..., 0, :, :, :], q0[..., 0, :, :, :])
+    assert not np.array_equal(q2[..., 1, :8, :, :],
+                              np.zeros_like(q2[..., 1, :8, :, :]))
+    assert np.all(s2[..., 1, :8, :] > 0), "scales not spliced with values"
+    cache3 = release_slot(cache2, 1)
+    assert np.all(np.asarray(cache3["full_pos"]) == -1)
+    assert np.array_equal(np.asarray(cache3["k"].q), q2)
+
+
+@pytest.mark.parametrize("precision", ["float", "int8"])
+def test_slot_reuse_after_release_exact(setup, precision):
+    """A slot that went alloc → write → release must serve its next
+    request exactly: stale KV from the previous occupant (bytes are kept,
+    only positions are wiped) can never leak into attention."""
+    cfg, params = setup
+    if precision == "int8":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, dtype="float32")
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (6, 9, 4)]
+    budgets = [4, 3, 5]
+    # one slot: every request reuses the same cache row sequentially
+    srv = ContinuousBatchServer(cfg, params, slots=1, buckets=(16,),
+                                max_new_tokens=8, precision=precision)
+    reqs = srv.submit(prompts, max_new_tokens=budgets)
+    srv.run()
+    if precision == "float":
+        refs = [_reference_decode(cfg, params, p, b)
+                for p, b in zip(prompts, budgets)]
+    else:
+        # fresh single-request int8 servers: no prior slot occupancy
+        refs = []
+        for p, b in zip(prompts, budgets):
+            one = ContinuousBatchServer(cfg, params, slots=1, buckets=(16,),
+                                        max_new_tokens=8, precision="int8")
+            (r,) = one.submit([p], max_new_tokens=[b])
+            one.run()
+            refs.append(r.tokens)
+    assert [r.tokens for r in reqs] == refs, \
+        "slot reuse leaked state between requests"
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window ring reconstruction (local_global arch), float + int8
+# ---------------------------------------------------------------------------
+RING_ARCH = "gemma3-4b"
+
+
+@pytest.fixture(scope="module")
+def ring_setup():
+    import dataclasses
+    cfg = dataclasses.replace(configs.get_smoke(RING_ARCH), dtype="float32")
+    params = init_params(cfg, jax.random.key(1))
+    return cfg, params
+
+
+def test_ring_prefill_quantizes_after_gather(ring_setup):
+    """Int8 ring caches are the quantization of the float ring caches:
+    per-entry quantization commutes with ``_ring_select``'s gather, so
+    one code path covers contiguous and ring layouts."""
+    cfg, params = ring_setup
+    fns = api.model_fns(cfg)
+    toks = jnp.asarray(np.arange(16, dtype=np.int32)[None, :])
+    _, float_cache = fns.forward_prefill(cfg, params, {"tokens": toks})
+    _, q_cache = fns.forward_prefill(cfg, params, {"tokens": toks}, qz.INT8)
+    for key in ("local_k", "local_v", "tail_k", "global_k"):
+        if key not in float_cache:
+            continue
+        expect = qz.quant_kv(float_cache[key])
+        got = q_cache[key]
+        assert isinstance(got, qz.Int8KV), key
+        np.testing.assert_array_equal(np.asarray(got.q),
+                                      np.asarray(expect.q), err_msg=key)
+        np.testing.assert_array_equal(np.asarray(got.scale),
+                                      np.asarray(expect.scale), err_msg=key)
+    np.testing.assert_array_equal(np.asarray(q_cache["local_pos"]),
+                                  np.asarray(float_cache["local_pos"]))
+
+
+@pytest.mark.parametrize("precision", ["float", "int8"])
+def test_ring_serving_token_exact(ring_setup, precision):
+    """Continuous serving on a local:global sliding-window arch — ring
+    caches rebuilt from left-padded bucket prefills, ring-slot decode
+    writes — is token-exact vs the contiguous reference (float) or the
+    fake-quant float simulation (int8)."""
+    cfg, params = ring_setup
+    rng = np.random.RandomState(8)
+    lens = [5, 12, 9]
+    budgets = [4, 6, 3]
+    prompts = [rng.randint(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
+    srv = ContinuousBatchServer(cfg, params, slots=2, buckets=(8, 16),
+                                max_new_tokens=8, precision=precision)
+    reqs = srv.submit(prompts, max_new_tokens=budgets)
+    srv.run()
+    if precision == "float":
+        refs = [_reference_decode(cfg, params, p, b)
+                for p, b in zip(prompts, budgets)]
+    else:
+        fq = ContinuousBatchServer(cfg, params, slots=2, buckets=(8, 16),
+                                   max_new_tokens=8,
+                                   precision="int8_fakequant")
+        fq.submit(prompts, max_new_tokens=budgets)
+        fq.run()
+        refs = [r.tokens for r in fq.requests.values()]
+    assert [r.tokens for r in reqs] == refs
