@@ -32,6 +32,30 @@ def main() -> List[Tuple[str, float, str]]:
     rows.append(("kernel/int8_matmul_ref", t_int8, f"{m}x{k}x{n}"))
     rows.append(("kernel/f32_matmul", t_f32, f"{m}x{k}x{n}"))
 
+    # decode attention (serving hot loop): float vs int8 cache,
+    # short-occupancy vs full-capacity kv_len.  On the ref path the
+    # bound is a mask (no skip), so the short/full delta is a TPU
+    # number; the rows pin the shapes + both precisions either way.
+    from repro.core.quantize import quant_kv
+    slots, cap, hq, hkv, hd = 4, 2048, 8, 2, 64
+    dq = jnp.asarray(rng.randn(slots, 1, hq, hd), jnp.float32)
+    dk = jnp.asarray(rng.randn(slots, cap, hkv, hd), jnp.float32)
+    dv = jnp.asarray(rng.randn(slots, cap, hkv, hd), jnp.float32)
+    dpos = jnp.broadcast_to(jnp.arange(cap, dtype=jnp.int32), (slots, cap))
+    dqp = jnp.full((slots,), cap - 1, jnp.int32)
+    kv_full = jnp.full((slots,), cap, jnp.int32)
+    kv_short = jnp.full((slots,), cap // 8, jnp.int32)
+    dk8, dv8 = quant_kv(dk), quant_kv(dv)
+    for tag, kk_, vv_ in (("float", dk, dv), ("int8", dk8, dv8)):
+        for occ, kvl in (("full", kv_full), ("short", kv_short)):
+            t = common.time_call(
+                jax.jit(lambda q_, k_, v_, kl: ops.decode_attention(
+                    q_, k_, v_, dqp, dpos, kv_len=kl)),
+                dq, kk_, vv_, kvl)
+            rows.append((f"kernel/decode_attn_{tag}_{occ}", t,
+                         f"slots={slots} cap={cap} kv_len={int(kvl[0])} "
+                         f"Hq/Hkv={hq}/{hkv}"))
+
     # flash attention ref vs naive full attention
     b, s, h, d = 1, 2048, 4, 64
     q = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)

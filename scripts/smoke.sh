@@ -16,3 +16,10 @@ python benchmarks/serve_bench.py --tiny --precision float
 echo
 echo "=== serve bench (float vs int8 end-to-end, tiny) ==="
 python benchmarks/serve_bench.py --tiny --precision int8
+
+echo
+echo "=== decode-kernel parity (Pallas lowering via interpret mode) ==="
+# Pin every kernels/ops dispatch to the Pallas interpreter so the
+# flash-decode lowering is exercised on every smoke run, not just on TPU:
+# kernel-vs-ref parity plus token-exact continuous serving through it.
+REPRO_KERNEL_PATH=interpret python -m pytest -q tests/test_flash_decode.py

@@ -124,6 +124,10 @@ def compile_serve_decode(cfg, params, *, slots: int, capacity: int,
     carries the KV-cache HBM footprint of both precisions so the deploy
     decision can read the delta without compiling twice — Table 4's
     RAM/flash story transposed to the serving tier.
+
+    The decode signature is ``(params, cache, token, position, write_idx,
+    kv_len)`` — ``kv_len`` (slots,) is the scheduler's per-slot fill the
+    flash-decode kernel bounds its KV sweep with (0 = idle slot).
     """
     from repro.serve.kvcache import abstract_decode_cache, decode_cache_nbytes
     from repro.serve.serve_step import make_slot_decode_step
@@ -137,7 +141,7 @@ def compile_serve_decode(cfg, params, *, slots: int, capacity: int,
     suffix = ""
     if policy is not None and policy.weights == "int8":
         suffix = "-int8"
-    art = compile_fn(step, params_abs, cache_abs, vec, vec, vec,
+    art = compile_fn(step, params_abs, cache_abs, vec, vec, vec, vec,
                      name=f"{cfg.name}-decode-b{slots}-s{capacity}{suffix}")
     art.memory["kv_cache_bytes"] = decode_cache_nbytes(cache_abs)
     art.memory["kv_cache_bytes_float"] = (

@@ -1,0 +1,191 @@
+"""Pallas TPU kernel: flash-decoding over the slot-addressed KV cache.
+
+One-token decode attention for the serving tier: every generated token
+streams the KV cache exactly once, in its stored precision.  Grid is
+(slot, kv-head, kv-block) with the KV sweep innermost so the online-
+softmax running state (max, sum, acc) lives in VMEM scratch across the
+blocks of one (slot, kv-head) pair.
+
+Three things distinguish this from the prefill flash kernel:
+
+* **Grouped-query GQA in-kernel** — the q tile is the (G, D) group of
+  query heads sharing one KV head, so KV is never repeated (repeating a
+  slot cache costs G× its HBM bytes; see ``layers.decode_attention``'s
+  history).
+* **Per-slot KV-length bounding** — ``kv_len (B,)`` is each slot's
+  high-water mark (entries at index >= kv_len are guaranteed invalid,
+  position −1).  Blocks entirely past it are skipped: their compute is
+  predicated off AND their index map is clamped to the last live block,
+  so the pipeline elides the HBM→VMEM copy.  Capacity is sized for
+  ``max_bucket + max_new_cap`` but typical requests fill a fraction of
+  it; decode HBM traffic tracks actual occupancy, not capacity.
+* **Fused Int8KV dequant** — int8 values and their per-(entry, head)
+  f32 scales are read and dequantized inside the VMEM tile; decode never
+  materializes a float copy of the cache.
+
+Masking is identical to the jnp ref: stored position −1 is invalid,
+``pos <= q_pos`` (causal), and ``pos > q_pos - window`` for sliding-
+window layers.  A slot with no valid entries (kv_len == 0, or all
+positions −1) produces zeros, matching ``ref.decode_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qp_ref, kl_ref, q_ref, k_ref, v_ref, pos_ref, *rest,
+            scale: float, bk: int, n_k: int, window: int, int8: bool):
+    if int8:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kvl = kl_ref[bi]
+
+    # Block liveness: the scheduler guarantees entries at index >= kv_len
+    # are invalid, so blocks past the high-water mark contribute nothing.
+    @pl.when(ki * bk < kvl)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bk, D)
+        if int8:
+            k = k * ks_ref[0].astype(jnp.float32)            # (bk, 1) scales
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        pos = pos_ref[...]                                   # (1, bk) int32
+        qp = qp_ref[bi]
+        idx = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        valid = (pos >= 0) & (pos <= qp) & (idx < kvl)
+        if window > 0:
+            valid &= pos > qp - window
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        # explicit mask multiply: an all-invalid block has m_new == NEG_INF
+        # and exp(s - m_new) == 1 there — the mask zeroes it so empty
+        # slots finalize to exactly 0 instead of a garbage mean.
+        p = jnp.exp(s - m_new[:, None]) * valid.astype(jnp.float32)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        m_ref[...] = m_new
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if int8:
+            v = v * vs_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _pad_seq(x: Optional[jax.Array], pad: int, axis: int, value=0):
+    if x is None or pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "block_k", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 q_pos: jax.Array, cache_pos: jax.Array, kv_len: jax.Array,
+                 *, k_scale: Optional[jax.Array] = None,
+                 v_scale: Optional[jax.Array] = None,
+                 window: int = 0, block_k: int = 128,
+                 interpret: bool = False) -> jax.Array:
+    """q: (B, Hkv, G, D) grouped queries; k/v: (B, S, Hkv, D) float — or
+    int8 with ``k_scale``/``v_scale`` (B, S, Hkv) f32 per-(entry, head)
+    scales.  q_pos: (B,) absolute query positions; cache_pos: (B, S)
+    stored positions (−1 invalid); kv_len: (B,) per-slot high-water mark
+    (use S for "scan everything").  Returns (B, Hkv, G, D) in q.dtype.
+
+    Callers should size S to a multiple of the KV block (the servers
+    round capacity up) — ragged S first shrinks the block (halving down
+    to 8) and only then pads, which costs a cache copy per call.
+    """
+    b, hkv, g, d = q.shape
+    s = k.shape[1]
+    # prefer a block that divides S (halving down to 8) over padding —
+    # padding copies the cache once per call
+    bk = min(block_k, s)
+    while s % bk and bk > 8:
+        bk //= 2
+    pad = (-s) % bk
+    if pad:
+        k = _pad_seq(k, pad, 1)
+        v = _pad_seq(v, pad, 1)
+        k_scale = _pad_seq(k_scale, pad, 1)
+        v_scale = _pad_seq(v_scale, pad, 1)
+        cache_pos = _pad_seq(cache_pos, pad, 1, value=-1)
+    n_k = (s + pad) // bk
+    int8 = k_scale is not None
+
+    def q_index(bi, hi, ki, qp, kl):
+        return (bi, hi, 0, 0)
+
+    def _clamp(bi, ki, kl):
+        # Dead blocks re-map to the last live one: an unchanged block
+        # index means the pipeline skips the HBM→VMEM copy entirely.
+        last_live = jnp.maximum(pl.cdiv(kl[bi], bk) - 1, 0)
+        return jnp.minimum(ki, last_live)
+
+    def kv_index(bi, hi, ki, qp, kl):
+        return (bi, _clamp(bi, ki, kl), hi, 0)
+
+    def pos_index(bi, hi, ki, qp, kl):
+        return (bi, _clamp(bi, ki, kl))
+
+    def scale_index(bi, hi, ki, qp, kl):
+        return (bi, _clamp(bi, ki, kl), hi)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), q_index),
+        pl.BlockSpec((1, bk, 1, d), kv_index),
+        pl.BlockSpec((1, bk, 1, d), kv_index),
+        pl.BlockSpec((1, bk), pos_index),
+    ]
+    operands = [q, k, v, cache_pos]
+    if int8:
+        in_specs += [pl.BlockSpec((1, bk, 1), scale_index),
+                     pl.BlockSpec((1, bk, 1), scale_index)]
+        operands += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, d), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),       # running max
+            pltpu.VMEM((g,), jnp.float32),       # running sum
+            pltpu.VMEM((g, d), jnp.float32),     # output accumulator
+        ])
+    kernel = functools.partial(
+        _kernel, scale=d ** -0.5, bk=bk, n_k=n_k, window=window, int8=int8)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(q_pos.astype(jnp.int32), kv_len.astype(jnp.int32), *operands)

@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from repro import flags
-from repro.core.quantize import PrecisionPolicy, QTensor, quant_dynamic
+from repro.core.quantize import Int8KV, PrecisionPolicy, QTensor, quant_dynamic
 from repro.kernels import flash_attention as fa
+from repro.kernels import flash_decode as fd
 from repro.kernels import int8_matmul as im
 from repro.kernels import mamba_scan as ms
 from repro.kernels import mel_frontend as mf
@@ -106,6 +107,48 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
 
 
+def decode_attention(q, k_cache, v_cache, q_position, cache_positions, *,
+                     window: int = 0,
+                     kv_len: Optional[jax.Array] = None,
+                     force: Optional[str] = None) -> jax.Array:
+    """One-token decode attention against a slot-addressed KV cache.
+
+    q: (B, 1, Hq, D); ``k_cache``/``v_cache``: (B, Skv, Hkv, D) float
+    arrays or ``Int8KV`` pairs; q_position: (B,); cache_positions:
+    (B, Skv) stored positions, −1 marking invalid entries.
+
+    ``kv_len`` (B,) is the serving tier's per-slot high-water mark: the
+    caller guarantees every entry at index >= kv_len[b] is invalid, so
+    the kernel skips those blocks outright (capacity is sized for the
+    worst case; typical slots fill a fraction of it).  ``None`` means no
+    bound (scan the whole cache; masking alone decides validity).
+
+    Int8 caches are dequantized per tile — inside the Pallas VMEM tile
+    on the kernel paths, per ``lax.scan`` block in the ref simulation —
+    so decode never materializes a float copy of the cache.
+    """
+    path = resolve_path(force)
+    if isinstance(k_cache, Int8KV):
+        k, k_scale = k_cache.q, k_cache.scale
+        v, v_scale = v_cache.q, v_cache.scale
+    else:
+        k, v, k_scale, v_scale = k_cache, v_cache, None, None
+    if path == "ref":
+        return ref.decode_attention_ref(
+            q, k, v, q_position, cache_positions, window=window,
+            kv_len=kv_len, k_scale=k_scale, v_scale=v_scale)
+    b, _, hq, d = q.shape
+    hkv = k.shape[2]
+    if kv_len is None:
+        kv_len = jnp.full((b,), k.shape[1], jnp.int32)
+    out = fd.flash_decode(
+        q.reshape(b, hkv, hq // hkv, d), k, v,
+        q_position.astype(jnp.int32), cache_positions, kv_len,
+        k_scale=k_scale, v_scale=v_scale, window=window,
+        interpret=(path == "interpret"))
+    return out.reshape(b, 1, hq, d)
+
+
 def mamba_scan(x, dt, b_mat, c_mat, a, *, force: Optional[str] = None
                ) -> Tuple[jax.Array, jax.Array]:
     path = resolve_path(force)
@@ -124,7 +167,6 @@ def mel_frontend(frames, window, dft_cos, dft_sin, mel_fb, *,
         return ref.mel_frontend_ref(frames, window, dft_cos, dft_sin, mel_fb)
     lead = frames.shape[:-2]
     f, l = frames.shape[-2:]
-    flat = frames.reshape((-1, l)) if lead else frames
     # fold leading dims into the frame dim
     flat = frames.reshape((-1, l))
     out = mf.mel_frontend(flat, window, dft_cos, dft_sin, mel_fb,

@@ -130,7 +130,11 @@ def forward_prefill(cfg: ArchConfig, params, inputs: Dict[str, jax.Array],
 
 def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
                    position: jax.Array, write_idx=None,
-                   policy: Optional[PrecisionPolicy] = None):
+                   policy: Optional[PrecisionPolicy] = None,
+                   kv_len=None):
+    """``kv_len`` bounds the decoder self-attn cache rows (serving
+    contract, see transformer.forward_decode); cross-attn KV is the
+    fixed-length encoder output and is never bounded."""
     params = maybe_cast_params(params, cfg)
     x = embed_tokens(params, token[:, None], cfg)
     widx = position if write_idx is None else write_idx
@@ -140,7 +144,7 @@ def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
         hh = rms_norm(p["attn_norm"], h, cfg.norm_eps)
         attn_out, ck, cv, _ = attention_decode_layer(
             p["attn"], hh, position, ck, cv, cache["full_pos"], widx,
-            policy=policy, **_attn_kwargs(cfg))
+            policy=policy, kv_len=kv_len, **_attn_kwargs(cfg))
         h = h + attn_out
         hh = rms_norm(p["xattn_norm"], h, cfg.norm_eps)
         x_out, _, _, _ = attention_decode_layer(

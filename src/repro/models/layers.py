@@ -12,9 +12,12 @@ statically per layer/shape so the HLO is honest about FLOPs and memory):
                            (flash-attention schedule in jnp); long sequences.
 * ``local_attention``    — sliding-window via the two-chunk band trick;
                            O(S * 2W) FLOPs, no scan carry.
-* ``decode_attention``   — one query step against a (possibly
-                           sequence-sharded) KV cache; flash-decoding style
-                           partial-softmax reductions are inserted by SPMD.
+* decode attention       — one query step against the slot-addressed KV
+                           cache, dispatched through
+                           ``kernels.ops.decode_attention``: the Pallas
+                           flash-decode kernel on TPU (per-slot kv_len
+                           bounding, in-tile Int8KV dequant), the jnp
+                           grouped-q einsum ref elsewhere.
 """
 from __future__ import annotations
 
@@ -28,7 +31,7 @@ from jax import lax
 from repro import flags
 from repro.core.quantize import (Int8KV, PrecisionPolicy, dequant_kv,
                                  quant_kv)
-from repro.kernels.ops import quant_matmul
+from repro.kernels.ops import decode_attention, quant_matmul
 from repro.sharding.policy import constrain
 
 NEG_INF = -1e30
@@ -37,14 +40,6 @@ NEG_INF = -1e30
 # ---------------------------------------------------------------------------
 # KV-cache representation helpers (PrecisionPolicy, serving tier)
 # ---------------------------------------------------------------------------
-def kv_read(cache, dtype) -> jax.Array:
-    """Materialize a KV-cache tensor for attention: dequantize Int8KV,
-    pass float caches through."""
-    if isinstance(cache, Int8KV):
-        return dequant_kv(cache, dtype)
-    return cache
-
-
 def _constrain_decode_kv(cache):
     if isinstance(cache, Int8KV):
         return Int8KV(
@@ -273,38 +268,6 @@ def local_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return o.reshape(b, s, hq, d)
 
 
-def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
-                     q_position: jax.Array, cache_positions: jax.Array,
-                     window: int = 0) -> jax.Array:
-    """One-token decode against a KV cache.
-
-    q: (B, 1, Hq, D); caches: (B, Skv, Hkv, D); q_position: (B,);
-    cache_positions: (B, Skv) with -1 marking unwritten slots.  When the
-    cache's seq dim is sharded over mesh axes ("flash decoding"), SPMD
-    turns the max/sum reductions into the partial-softmax collectives.
-
-    Uses the grouped-q einsum (NOT _repeat_kv): materializing a repeated
-    KV cache costs G× the cache bytes (measured +8 GiB/device on
-    qwen2-72b decode).  Heads are replicated in decode rules so the
-    grouped reshape carries no sharding hazard here.
-    """
-    b, _, hq, d = q.shape
-    hkv = k_cache.shape[2]
-    g = hq // hkv
-    scale = d ** -0.5
-    qg = (q * scale).reshape(b, hkv, g, d)
-    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
-                   preferred_element_type=jnp.float32)         # (B,Hkv,G,Skv)
-    valid = cache_positions >= 0
-    valid &= cache_positions <= q_position[:, None]
-    if window > 0:
-        valid &= cache_positions > (q_position[:, None] - window)
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
-    return o.reshape(b, 1, hq, d)
-
-
 # ---------------------------------------------------------------------------
 # Attention layer (projections + rope + core dispatch)
 # ---------------------------------------------------------------------------
@@ -368,15 +331,23 @@ def attention_decode_layer(p: dict, x: jax.Array, position: jax.Array,
                            rope_variant: str, rope_theta: float,
                            mrope_sections, window: int = 0,
                            cross: bool = False,
-                           policy: Optional[PrecisionPolicy] = None):
+                           policy: Optional[PrecisionPolicy] = None,
+                           kv_len: Optional[jax.Array] = None):
     """One decode step.  x: (B, 1, d); position: (B,) absolute position;
     write_idx: (B,) slot to write KV into (ring index for sliding caches).
 
     ``cache_k``/``cache_v`` are float arrays or ``Int8KV`` pairs; int8
-    caches get the new K/V quantized per (entry, head) on write and the
-    whole cache dequantized for the attention core.  A fake_quant policy
-    mirrors that bit-exactly on a float cache (quantize→dequantize at
-    write time), which is what makes int8 serving testable token-exact.
+    caches get the new K/V quantized per (entry, head) on write and
+    dequantized tile-by-tile inside the attention kernel — the decode
+    path never materializes a float copy of the cache.  A fake_quant
+    policy mirrors the numerics bit-exactly on a float cache (quantize→
+    dequantize at write time), which is what makes int8 serving testable
+    token-exact.
+
+    ``kv_len`` (B,) optionally bounds each row's valid cache region by
+    index (the serving tier's per-slot high-water mark); sliding-window
+    ring caches derive their own bound from ``position`` (ring fill is a
+    prefix of length min(position + 1, window)).
 
     Returns (out, new_cache_k, new_cache_v, new_cache_positions).
     """
@@ -385,8 +356,7 @@ def attention_decode_layer(p: dict, x: jax.Array, position: jax.Array,
         b, 1, n_heads, head_dim)
     if cross:
         # Cross attention: cache holds encoder KV; nothing is written.
-        o = decode_attention(q, kv_read(cache_k, x.dtype),
-                             kv_read(cache_v, x.dtype),
+        o = decode_attention(q, cache_k, cache_v,
                              jnp.full((b,), 2 ** 30, jnp.int32),
                              cache_positions)
         out = quant_matmul(o.reshape(b, 1, n_heads * head_dim), p["wo"],
@@ -426,9 +396,18 @@ def attention_decode_layer(p: dict, x: jax.Array, position: jax.Array,
     )(cache_positions, position, write_idx)
     cache_k = _constrain_decode_kv(cache_k)
     cache_v = _constrain_decode_kv(cache_v)
-    o = decode_attention(q, kv_read(cache_k, x.dtype),
-                         kv_read(cache_v, x.dtype), position,
-                         cache_positions, window=window)
+    s_kv = cache_positions.shape[1]
+    if window > 0:
+        # Ring cache: slots 0..min(position, w-1) are the only ones ever
+        # written (slot = pos % w), so the fill is a prefix the kernel
+        # can bound on; kv_len == 0 (an idle serving slot) still wins.
+        bound = jnp.minimum(position.astype(jnp.int32) + 1, s_kv)
+        if kv_len is not None:
+            bound = jnp.minimum(bound, jnp.clip(kv_len, 0, s_kv))
+    else:
+        bound = kv_len
+    o = decode_attention(q, cache_k, cache_v, position,
+                         cache_positions, window=window, kv_len=bound)
     out = quant_matmul(o.reshape(b, 1, n_heads * head_dim), p["wo"],
                        policy=policy)
     return out, cache_k, cache_v, cache_positions

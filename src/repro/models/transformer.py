@@ -150,11 +150,12 @@ def mamba_block(cfg: ArchConfig, p, x, state=None):
 
 
 def dense_block_decode(cfg: ArchConfig, p, x, position, cache_k, cache_v,
-                       cache_pos, write_idx, *, window=0, policy=None):
+                       cache_pos, write_idx, *, window=0, policy=None,
+                       kv_len=None):
     h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
     attn_out, ck, cv, cp = attention_decode_layer(
         p["attn"], h, position, cache_k, cache_v, cache_pos, write_idx,
-        policy=policy, **_attn_kwargs(cfg, window))
+        policy=policy, kv_len=kv_len, **_attn_kwargs(cfg, window))
     x = x + attn_out
     h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
     x = x + swiglu_mlp(p["mlp"], h, policy)
@@ -162,11 +163,11 @@ def dense_block_decode(cfg: ArchConfig, p, x, position, cache_k, cache_v,
 
 
 def moe_block_decode(cfg: ArchConfig, p, x, position, cache_k, cache_v,
-                     cache_pos, write_idx, policy=None):
+                     cache_pos, write_idx, policy=None, kv_len=None):
     h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
     attn_out, ck, cv, cp = attention_decode_layer(
         p["attn"], h, position, cache_k, cache_v, cache_pos, write_idx,
-        policy=policy, **_attn_kwargs(cfg))
+        policy=policy, kv_len=kv_len, **_attn_kwargs(cfg))
     x = x + attn_out
     h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
     x = x + moe_layer(p["moe"], h, cfg)
@@ -275,8 +276,15 @@ def trunk_forward(cfg: ArchConfig, params, x, positions, *,
 
 def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
                  write_full, write_local,
-                 policy: Optional[PrecisionPolicy] = None):
-    """One-token pass through all blocks, updating the cache pytree."""
+                 policy: Optional[PrecisionPolicy] = None,
+                 kv_len: Optional[jax.Array] = None):
+    """One-token pass through all blocks, updating the cache pytree.
+
+    ``kv_len`` (B,) is the per-row high-water mark of the full-attention
+    caches (serving passes each slot's fill so the decode kernel skips
+    the unused capacity tail); ring caches bound themselves from
+    ``position``.
+    """
     pat = layer_pattern(cfg)
     new_cache = dict(cache)
 
@@ -287,7 +295,8 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
             p, ck, cv = pc
             fn = moe_block_decode if is_moe else dense_block_decode
             h, ck, cv, cp = fn(cfg, p, h, position, ck, cv,
-                               cache["full_pos"], write_full, policy=policy)
+                               cache["full_pos"], write_full, policy=policy,
+                               kv_len=kv_len)
             return h, (ck, cv)
         x, (ks, vs) = lax.scan(body, x, (params["blocks"],
                                          cache["k"], cache["v"]))
@@ -309,7 +318,7 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
             p, ck, cv = pc
             h, ck, cv, cp = dense_block_decode(
                 cfg, p, h, position, ck, cv, cache["local_pos"],
-                write_local, window=w, policy=policy)
+                write_local, window=w, policy=policy, kv_len=kv_len)
             return h, (ck, cv)
 
         def group_body(h, pc):
@@ -317,7 +326,7 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
             h, (lks, lvs) = lax.scan(local_body, h, (p["local"], lk, lv))
             h, gk, gv, _ = dense_block_decode(
                 cfg, p["global"], h, position, gk, gv,
-                cache["full_pos"], write_full, policy=policy)
+                cache["full_pos"], write_full, policy=policy, kv_len=kv_len)
             return h, (lks, lvs, gk, gv)
 
         x, (lks, lvs, gks, gvs) = lax.scan(
@@ -347,7 +356,7 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
             h, states = lax.scan(mamba_body, h, (p, tuple(st)))
             h, ck, cv, _ = dense_block_decode(
                 cfg, shared, h, position, ck, cv,
-                cache["full_pos"], write_full, policy=policy)
+                cache["full_pos"], write_full, policy=policy, kv_len=kv_len)
             return h, (states, ck, cv)
 
         x, (states, ks, vs) = lax.scan(
@@ -423,7 +432,8 @@ def forward_prefill(cfg: ArchConfig, params, inputs: Dict[str, jax.Array],
 
 def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
                    position: jax.Array, write_idx: Optional[jax.Array] = None,
-                   policy: Optional[PrecisionPolicy] = None):
+                   policy: Optional[PrecisionPolicy] = None,
+                   kv_len: Optional[jax.Array] = None):
     """token: (B,) int32; position: (B,) absolute index of this token.
 
     ``write_idx`` (B,) is the cache slot row index to write KV into; it
@@ -431,6 +441,12 @@ def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
     passes it separately because a left-padded prefill bucket leaves the
     cache index ≠ absolute position.  Attention validity is always
     decided by stored positions, never by slot index.
+
+    ``kv_len`` (B,) optionally bounds each row's live cache region by
+    index: the caller promises every entry at index >= kv_len is invalid
+    (position −1), letting the decode kernel skip the capacity tail (and
+    skip idle serving slots entirely with kv_len == 0).  ``None`` scans
+    the whole cache — masking alone still guarantees correctness.
     """
     params = maybe_cast_params(params, cfg)
     x = embed_tokens(params, token[:, None], cfg)
@@ -439,7 +455,8 @@ def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
     write_local = position % w if w else write_full
     x, new_cache = trunk_decode(cfg, params, x, position, cache,
                                 write_full=write_full,
-                                write_local=write_local, policy=policy)
+                                write_local=write_local, policy=policy,
+                                kv_len=kv_len)
     logits = unembed(params, x, cfg)[:, 0]
     # position bookkeeping lives outside trunk_decode (shared across layers)
     if "full_pos" in new_cache:

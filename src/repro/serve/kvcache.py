@@ -71,8 +71,10 @@ def kv_cache_bytes(cfg: ArchConfig, batch: int, seq_len: int,
         n_local = cfg.n_layers - n_global
         return int(n_global * per_layer_kv * seq_len
                    + n_local * per_layer_kv * min(cfg.sliding_window, seq_len))
-    n_layers = cfg.n_layers + (cfg.n_enc_layers if cfg.is_encdec else 0) * 0
-    total = n_layers * per_layer_kv * seq_len
+    # Enc-dec: encoder layers hold no decode-time cache (the encoder runs
+    # once; its output *is* the cross KV).  The decoder holds self-attn KV
+    # over seq_len plus cross-attn KV over the subsampled encoder length.
+    total = cfg.n_layers * per_layer_kv * seq_len
     if cfg.is_encdec:
         total += cfg.n_layers * per_layer_kv * (seq_len // cfg.enc_seq_divisor)
     return int(total)

@@ -71,13 +71,21 @@ def make_slot_decode_step(cfg: ArchConfig, *,
     ``policy`` (``PrecisionPolicy``) selects the weight/activation/KV
     precision the step lowers with — it is part of the compiled
     artifact's identity, not a runtime argument.
+
+    ``kv_len`` (B,) is the scheduler's per-slot fill (high-water mark +
+    1 for the entry this step writes; 0 for idle slots): the decode
+    attention kernel reads only ``kv_len`` cache rows per slot instead
+    of the full capacity rectangle.  The caller owns the contract that
+    entries at index >= kv_len are invalid (position −1) — which the
+    slot API guarantees (write_slot wipes the row, decode writes advance
+    the mark by one).
     """
     fns = model_fns(cfg)
 
-    def decode_step(params, cache, token, position, write_idx):
+    def decode_step(params, cache, token, position, write_idx, kv_len):
         logits, new_cache = fns.forward_decode(cfg, params, cache, token,
                                                position, write_idx,
-                                               policy=policy)
+                                               policy=policy, kv_len=kv_len)
         next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_token, logits, new_cache
 

@@ -20,6 +20,12 @@ construction, serves through the quant-aware matmul entry point, and
 keeps the decode cache as Int8KV — ≥2× KV HBM, token-exact against the
 fake-quant float reference (docs/quantization.md).
 
+Both feed the decode step a per-slot ``kv_len`` (the scheduler's fill
+high-water mark; 0 for idle slots) so the flash-decode kernel reads
+only each slot's live prefix of the capacity rectangle — and int8
+decode dequantizes inside the kernel tile, never materializing a float
+cache (docs/serving.md, "Flash-decode kernel").
+
 Both left-pad prompts into the prefill bucket with position −1 marking
 pad entries, which the attention masks treat as never-attendable, so
 batched serving is token-exact versus an unpadded single-request decode
@@ -42,6 +48,11 @@ from repro.serve.kvcache import (alloc_decode_cache, decode_cache_nbytes,
                                  grow_cache, release_slot, write_slot)
 from repro.serve.scheduler import BucketPolicy, SlotScheduler
 from repro.serve.serve_step import make_prefill_step, make_slot_decode_step
+
+# Decode-cache capacity granularity: one flash-decode KV block (a
+# sub-multiple of kernels/flash_decode.py's block_k, so any rounded
+# capacity tiles cleanly on every backend).
+KV_BLOCK = 64
 
 
 @dataclasses.dataclass
@@ -159,7 +170,18 @@ class ContinuousBatchServer(_ServerBase):
         self.policy = BucketPolicy(buckets or (prompt_len or 32,))
         self.max_new = int(max_new_tokens)
         self.max_new_cap = int(max_new_cap or max(self.max_new, 1))
-        self.capacity = self.policy.max_bucket + self.max_new_cap
+        # Capacity rounds up to the flash-decode KV block so the kernel
+        # never pads the cache per step; the tail is dead capacity the
+        # per-slot kv_len bound skips without reading.
+        need = self.policy.max_bucket + self.max_new_cap
+        self.capacity = -(-need // KV_BLOCK) * KV_BLOCK
+        # effective flash-decode block at this capacity (mirrors the
+        # kernel's choice: min(128, S), halved until it divides S) —
+        # the HBM-read metric quantizes to it
+        bk = min(128, self.capacity)
+        while self.capacity % bk and bk > 8:
+            bk //= 2
+        self._kv_block = bk
         self.eos_id = eos_id
         self.sched = SlotScheduler(self.n_slots)
         self.prefill = jax.jit(make_prefill_step(cfg, policy=self.prec))
@@ -227,6 +249,8 @@ class ContinuousBatchServer(_ServerBase):
         decode_steps = 0
         prefills = 0
         occupancy: List[int] = []
+        kv_fill: List[int] = []   # Σ block-rounded kv_len per decode step
+        kv_raw: List[int] = []    # Σ kv_len per decode step (slot fill)
 
         while self.sched.busy:
             # Admission: freed slots pick up waiting requests *now*, not
@@ -242,13 +266,22 @@ class ContinuousBatchServer(_ServerBase):
             tok = np.array(self._cur)
             pos = np.zeros((self.n_slots,), np.int32)
             widx = np.full((self.n_slots,), self.capacity - 1, np.int32)
+            # per-slot KV high-water mark: the decode kernel reads only
+            # kv_len rows per slot (0 = idle slot, skipped outright)
+            kvl = np.zeros((self.n_slots,), np.int32)
             for s in active:
                 pos[s.index] = s.position
                 widx[s.index] = s.write_idx
+                kvl[s.index] = s.write_idx + 1
             ntok, _, self.cache = self.decode(self.params, self.cache,
-                                              tok, pos, widx)
+                                              tok, pos, widx, kvl)
             decode_steps += 1
             occupancy.append(len(active))
+            # block-granular: the kernel fetches whole KV blocks, and
+            # even an idle slot's clamped index map fetches one
+            blocks = np.maximum(-(-kvl // self._kv_block), 1)
+            kv_fill.append(int(blocks.sum()) * self._kv_block)
+            kv_raw.append(int(kvl.sum()))
             ntok_h = np.asarray(ntok)
 
             for s in active:
@@ -270,6 +303,17 @@ class ContinuousBatchServer(_ServerBase):
                                   n_slots=self.n_slots)
         self.metrics["precision"] = self.precision
         self.metrics["kv_cache_bytes"] = decode_cache_nbytes(self.cache)
+        if kv_fill:
+            # fraction of the slots × capacity rectangle the bounded
+            # decode kernel reads per step (1.0 = no bounding).  Block-
+            # granular at the kernel's effective block, and exact only
+            # for the kv_len-bounded full-attention leaves — ring/local
+            # caches carry their own position-based bound.
+            # kv_fill_frac is the raw slot fill (entries), the floor the
+            # read fraction approaches as capacity / block grows.
+            denom = self.n_slots * self.capacity
+            self.metrics["kv_read_frac"] = float(np.mean(kv_fill) / denom)
+            self.metrics["kv_fill_frac"] = float(np.mean(kv_raw) / denom)
         if self.artifact is not None:
             self.metrics["artifact_bytes"] = self.artifact.artifact_bytes
         return self.metrics
@@ -342,8 +386,9 @@ class StaticBatchServer(_ServerBase):
             for step in range(horizon):
                 pos = jnp.asarray(plens + step)
                 widx = jnp.full((b,), self.prompt_len + step, jnp.int32)
+                kvl = jnp.full((b,), self.prompt_len + step + 1, jnp.int32)
                 cur, _, cache = self.decode(self.params, cache, cur, pos,
-                                            widx)
+                                            widx, kvl)
                 decode_steps += 1
                 ctok = np.asarray(cur)
                 for i, r in enumerate(batch):

@@ -289,9 +289,10 @@ def test_compile_serve_decode_int8_reports_hbm_delta(setup):
     assert art.name.endswith("-int8")
     mem = art.memory
     assert mem["kv_cache_bytes_float"] / mem["kv_cache_bytes"] >= 2.0
-    # the serialized executable stays runnable
+    # the serialized executable stays runnable; decode signature is
+    # (params, cache, token, position, write_idx, kv_len)
     fn = art.rehydrate()
     cache = alloc_decode_cache(cfg, 2, 12, qz.INT8)
     tok = jnp.zeros((2,), jnp.int32)
-    ntok, _, _ = fn(qparams, cache, tok, tok, tok)
+    ntok, _, _ = fn(qparams, cache, tok, tok, tok, tok)
     assert ntok.shape == (2,)

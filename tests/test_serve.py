@@ -198,6 +198,36 @@ def test_batchserver_alias_is_continuous():
     assert BatchServer is ContinuousBatchServer
 
 
+def test_kv_cache_bytes_encdec_sizing():
+    """Pin the enc-dec sizing formula: encoder layers hold NO decode
+    cache (the encoder runs once; its output is the cross KV); the
+    decoder holds self-attn KV over seq plus cross-attn KV over the
+    subsampled encoder length.  Cross-checked against the leaf bytes of
+    an actual prefill cache."""
+    from repro.core.arch import ShapeConfig
+    from repro.serve.kvcache import kv_cache_bytes
+
+    cfg = configs.get("seamless-m4t-large-v2")
+    b, s, db = 2, 1024, 2
+    per_entry = 2 * b * cfg.n_kv_heads * cfg.resolved_head_dim * db
+    expect = (cfg.n_layers * per_entry * s
+              + cfg.n_layers * per_entry * (s // cfg.enc_seq_divisor))
+    assert kv_cache_bytes(cfg, b, s, db) == expect
+
+    # the abstract prefill cache's K/V leaves carry exactly those bytes
+    smoke = configs.get_smoke("seamless-m4t-large-v2")
+    b2, s2 = 2, 16
+    cache = api.abstract_cache(
+        smoke, ShapeConfig("sizing", seq_len=s2, global_batch=b2,
+                           kind="prefill"))
+    kv_bytes = sum(
+        int(np.prod(cache[key].shape))
+        * jnp.dtype(cache[key].dtype).itemsize
+        for key in ("k", "v", "xk", "xv"))
+    itemsize = jnp.dtype(cache["k"].dtype).itemsize
+    assert kv_bytes == kv_cache_bytes(smoke, b2, s2, itemsize)
+
+
 # ---------------------------------------------------------------------------
 # Slot lifecycle: alloc → write → release → re-admit, float and int8
 # ---------------------------------------------------------------------------
