@@ -56,6 +56,23 @@ def main() -> List[Tuple[str, float, str]]:
                          f"slots={slots} cap={cap} kv_len={int(kvl[0])} "
                          f"Hq/Hkv={hq}/{hkv}"))
 
+    # chunk-prefill attention (serving admission path): C chunk queries
+    # against the live slot prefix — one compiled shape regardless of
+    # prompt length, kv_len-bounded like decode.
+    c = 16
+    cq = jnp.asarray(rng.randn(slots, c, hq, hd), jnp.float32)
+    cqp = jnp.broadcast_to(jnp.arange(cap // 8 - c, cap // 8,
+                                      dtype=jnp.int32), (slots, c))
+    kv_chunk = jnp.full((slots,), cap // 8, jnp.int32)
+    for tag, kk_, vv_ in (("float", dk, dv), ("int8", dk8, dv8)):
+        t = common.time_call(
+            jax.jit(lambda q_, k_, v_, kl: ops.chunk_attention(
+                q_, k_, v_, cqp, dpos, kv_len=kl)),
+            cq, kk_, vv_, kv_chunk)
+        rows.append((f"kernel/chunk_prefill_attn_{tag}", t,
+                     f"slots={slots} cap={cap} C={c} "
+                     f"kv_len={int(kv_chunk[0])} Hq/Hkv={hq}/{hkv}"))
+
     # flash attention ref vs naive full attention
     b, s, h, d = 1, 2048, 4, 64
     q = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)

@@ -1,6 +1,6 @@
 """Serving benchmark: static vs continuous batching × float vs int8
-precision on a mixed-length synthetic workload (paper §4.6 + C5
-operationalised).
+precision × prefill chunk size on a mixed-length synthetic workload
+(paper §4.6 + C5 operationalised).
 
 Engines: both run the same greedy decode steps over the same requests —
 scheduling is the only variable — so the delta is pure head-of-line
@@ -13,12 +13,22 @@ runs f32 activations (the paper's C5 baseline is float32; bf16 is
 emulated on CPU anyway), so the HBM reduction is the honest f32→int8
 ratio.
 
+Chunking: ``--prefill-chunk 4 8 16`` sweeps the chunked pad-free
+admission axis on the continuous engine — TTFT p50/p95 and the
+``kv_read_frac``/``kv_fill_frac`` decode-bandwidth metrics per chunk
+size, next to an *estimated* padded-baseline fill (what the retired
+left-pad bucket ladder ``(max/4, max/2, max)`` would have kept live:
+pad rows sat inside ``kv_len`` and were read every decode step).  The
+measured read-fraction drop versus that estimate is the bandwidth the
+pad rows used to burn.
+
 The workload generator is seeded (``--seed``) and built ONCE per run:
-float-vs-int8 and continuous-vs-static all serve the identical request
-mix, so every ratio in the report is apples-to-apples.
+float-vs-int8, continuous-vs-static, and every chunk size all serve the
+identical request mix, so every ratio in the report is apples-to-apples.
 
 Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--tiny]
           [--artifact] [--precision {float,int8}] [--seed N]
+          [--prefill-chunk C ...]
 """
 from __future__ import annotations
 
@@ -52,40 +62,77 @@ def mixed_workload(vocab: int, n_requests: int, max_prompt: int,
     return prompts, budgets
 
 
+def _padded_fill_frac_est(server, chunk_metrics) -> float:
+    """What ``kv_fill_frac`` would have been under the retired left-pad
+    bucket ladder ``(max/4, max/2, max)``: each request's slot carried
+    ``bucket(S) − S`` pad rows inside ``kv_len`` for every decode step
+    it was live (≈ its generated-token count)."""
+    buckets = sorted({max(server.max_prompt // 4, 1),
+                      max(server.max_prompt // 2, 1), server.max_prompt})
+
+    def bucket(n):
+        for b in buckets:
+            if n <= b:
+                return b
+        return buckets[-1]
+
+    extra = sum((bucket(len(r.prompt)) - len(r.prompt)) * len(r.tokens)
+                for r in server.requests.values())
+    denom = (chunk_metrics["decode_steps"] * server.n_slots
+             * server.capacity)
+    return chunk_metrics.get("kv_fill_frac", 0.0) + extra / max(denom, 1)
+
+
 def _run_engines(cfg, params, prompts, budgets, *, slots, max_prompt,
-                 max_new, use_artifact, precision):
+                 max_new, use_artifact, precision, prefill_chunk=8):
     static = StaticBatchServer(cfg, params, batch_size=slots,
-                               prompt_len=max_prompt, max_new_tokens=max_new,
-                               precision=precision)
+                               max_prompt=max_prompt,
+                               prefill_chunk=prefill_chunk,
+                               max_new_tokens=max_new, precision=precision)
     static.submit(prompts, max_new_tokens=budgets)
     m_static = static.run()
 
     cont = ContinuousBatchServer(
-        cfg, params, slots=slots,
-        buckets=(max_prompt // 4, max_prompt // 2, max_prompt),
-        max_new_tokens=max_new, use_artifact=use_artifact,
-        precision=precision)
+        cfg, params, slots=slots, max_prompt=max_prompt,
+        prefill_chunk=prefill_chunk, max_new_tokens=max_new,
+        use_artifact=use_artifact, precision=precision)
     cont.submit(prompts, max_new_tokens=budgets)
     m_cont = cont.run()
+    m_cont["padded_fill_frac_est"] = _padded_fill_frac_est(cont, m_cont)
 
     # same scheduling-independent outputs → the speedup is real, not a
-    # different (cheaper) computation
+    # different (cheaper) computation.  Pad-free chunked prefill makes
+    # this exact for EVERY family — SSM/hybrid recurrences included.
     s_reqs = list(static.requests.values())
     tokens_match = ([r.tokens for r in s_reqs]
                     == [cont.requests[i].tokens for i in
                         sorted(cont.requests)])
-    assert tokens_match or cfg.family in ("ssm", "hybrid"), \
-        f"engines diverged on an attention arch ({precision})"
+    assert tokens_match, f"engines diverged ({cfg.name}, {precision})"
     return {"static": m_static, "continuous": m_cont,
             "tokens_match": bool(tokens_match),
             "tokens_per_s_speedup": (m_cont["tokens_per_s"]
                                      / max(m_static["tokens_per_s"], 1e-9))}
 
 
+def _run_chunk_axis(cfg, params, prompts, budgets, *, slots, max_prompt,
+                    max_new, precision, chunks):
+    """Continuous engine only, one run per chunk size, same workload."""
+    rows = {}
+    for c in chunks:
+        cont = ContinuousBatchServer(
+            cfg, params, slots=slots, max_prompt=max_prompt,
+            prefill_chunk=c, max_new_tokens=max_new, precision=precision)
+        cont.submit(prompts, max_new_tokens=budgets)
+        m = cont.run()
+        m["padded_fill_frac_est"] = _padded_fill_frac_est(cont, m)
+        rows[c] = m
+    return rows
+
+
 def run_bench(arch: str = "internlm2-1.8b", *, n_requests: int = 12,
               slots: int = 4, max_prompt: int = 32, max_new: int = 24,
               use_artifact: bool = False, seed: int = 0,
-              precision: str = "float"):
+              precision: str = "float", prefill_chunks=None):
     cfg = configs.get_smoke(arch)
     if precision == "int8":
         # precision axis: pin f32 activations so the float baseline is
@@ -107,6 +154,11 @@ def run_bench(arch: str = "internlm2-1.8b", *, n_requests: int = 12,
         fb = report["float"]["continuous"]["kv_cache_bytes"]
         qb = report["int8"]["continuous"]["kv_cache_bytes"]
         report["kv_cache_hbm_reduction"] = fb / max(qb, 1)
+    if prefill_chunks:
+        report["chunk_axis"] = _run_chunk_axis(
+            cfg, params, prompts, budgets, slots=slots,
+            max_prompt=max_prompt, max_new=max_new, precision=precision,
+            chunks=prefill_chunks)
     # legacy top-level keys (float engine comparison)
     report.update({k: report["float"][k] for k in
                    ("static", "continuous", "tokens_match",
@@ -116,7 +168,7 @@ def run_bench(arch: str = "internlm2-1.8b", *, n_requests: int = 12,
 
 def _decode_hbm_note(res, tag):
     """Per-decode-step KV HBM bytes: the full slots × capacity rectangle
-    vs what the kv_len-bounded flash-decode kernel reads (scheduler
+    vs what the kv_len-bounded flash-decode kernel reads (exact pad-free
     fill, whole KV blocks).  Wall-clock effect needs TPU; the byte
     estimate prices full-attention KV leaves — window-bounded ring
     caches are carried at the same fraction as an approximation."""
@@ -125,10 +177,14 @@ def _decode_hbm_note(res, tag):
     frac = c.get("kv_read_frac")
     if not full or frac is None:
         return None
+    pad = c.get("padded_fill_frac_est")
+    pad_note = (f"; padded-baseline fill est {pad:.1%}"
+                if pad is not None else "")
     return (f"[{tag}] decode-step KV read: full-capacity scan {full:,} B"
             f" → kv_len-bounded {int(full * frac):,} B"
             f" ({frac:.0%} of capacity at kernel-block granularity;"
-            f" raw slot fill {c.get('kv_fill_frac', 0):.0%})")
+            f" exact pad-free fill {c.get('kv_fill_frac', 0):.1%}"
+            f"{pad_note})")
 
 
 def _print_engine_lines(tag, res):
@@ -146,6 +202,18 @@ def _print_engine_lines(tag, res):
     print(f"[{tag}] speedup    : {res['tokens_per_s_speedup']:.2f}x tokens/s")
 
 
+def _print_chunk_axis(rows):
+    print("\nprefill-chunk axis (continuous engine, same workload):")
+    print("  C   tok/s   ttft_p50   ttft_p95   kv_read  kv_fill  "
+          "padded_est")
+    for c, m in sorted(rows.items()):
+        print(f"{c:>3} {m['tokens_per_s']:7.1f} "
+              f"{m['ttft_p50_s'] * 1e3:8.1f}ms {m['ttft_p95_s'] * 1e3:8.1f}ms"
+              f" {m.get('kv_read_frac', 0):8.0%} "
+              f"{m.get('kv_fill_frac', 0):8.1%} "
+              f"{m.get('padded_fill_frac_est', 0):8.1%}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
@@ -161,7 +229,10 @@ def main(argv=None) -> None:
                          " delta vs float")
     ap.add_argument("--seed", type=int, default=0,
                     help="workload seed (same seed ⇒ identical request mix"
-                         " across engines and precisions)")
+                         " across engines, precisions, and chunk sizes)")
+    ap.add_argument("--prefill-chunk", type=int, nargs="+", default=None,
+                    help="sweep chunked-admission chunk sizes on the"
+                         " continuous engine (TTFT + kv-read/fill per C)")
     ap.add_argument("--tiny", action="store_true",
                     help="smoke-sized run for scripts/smoke.sh")
     args = ap.parse_args(argv)
@@ -172,7 +243,8 @@ def main(argv=None) -> None:
     rep = run_bench(args.arch, n_requests=args.requests, slots=args.slots,
                     max_prompt=args.max_prompt, max_new=args.max_new,
                     use_artifact=args.artifact, seed=args.seed,
-                    precision=args.precision)
+                    precision=args.precision,
+                    prefill_chunks=args.prefill_chunk)
     print(json.dumps(rep, indent=1))
     print()
     _print_engine_lines("float", rep["float"])
@@ -188,6 +260,8 @@ def main(argv=None) -> None:
               f"{rep['float']['continuous']['kv_cache_bytes']:,} B  →  int8 "
               f"{rep['int8']['continuous']['kv_cache_bytes']:,} B  "
               f"({rep['kv_cache_hbm_reduction']:.2f}x reduction)")
+    if "chunk_axis" in rep:
+        _print_chunk_axis(rep["chunk_axis"])
 
 
 if __name__ == "__main__":

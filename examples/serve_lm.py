@@ -33,13 +33,12 @@ def main():
     params = init_params(cfg, jax.random.key(0))
     if args.engine == "static":
         server = StaticBatchServer(cfg, params, batch_size=args.slots,
-                                   prompt_len=args.prompt_len,
+                                   max_prompt=args.prompt_len,
                                    max_new_tokens=args.max_new,
                                    precision=args.precision)
     else:
         server = ContinuousBatchServer(
-            cfg, params, slots=args.slots,
-            buckets=(args.prompt_len // 2, args.prompt_len),
+            cfg, params, slots=args.slots, max_prompt=args.prompt_len,
             max_new_tokens=args.max_new, precision=args.precision)
     rng = np.random.RandomState(0)
     # mixed-length workload: short and long prompts, varied budgets

@@ -18,6 +18,17 @@ echo "=== serve bench (float vs int8 end-to-end, tiny) ==="
 python benchmarks/serve_bench.py --tiny --precision int8
 
 echo
+echo "=== chunked-prefill serving (pad-free admission, float + int8) ==="
+# Run the chunked pad-free admission path end-to-end through the Pallas
+# interpreter (chunk-prefill + flash-decode kernels) on both sides of
+# the precision axis: the chunk-size sweep exercises ragged final
+# chunks, interleaved prefill/decode, and the kv_len fill metrics.
+REPRO_KERNEL_PATH=interpret python benchmarks/serve_bench.py --tiny \
+    --precision float --prefill-chunk 4 16
+REPRO_KERNEL_PATH=interpret python benchmarks/serve_bench.py --tiny \
+    --precision int8 --prefill-chunk 4
+
+echo
 echo "=== decode-kernel parity (Pallas lowering via interpret mode) ==="
 # Pin every kernels/ops dispatch to the Pallas interpreter so the
 # flash-decode lowering is exercised on every smoke run, not just on TPU:

@@ -118,16 +118,19 @@ def compile_serve_decode(cfg, params, *, slots: int, capacity: int,
     "deploy" — zero Python tracing per token.
 
     ``slots`` is the engine's decode batch (slot count), ``capacity`` the
-    per-slot KV row length (max bucket + max generation budget).
+    per-slot KV row length (max prompt + max generation budget).
     ``policy`` (``PrecisionPolicy``) lowers the int8 variant: QTensor
     params and an Int8KV cache.  The artifact's static resource report
     carries the KV-cache HBM footprint of both precisions so the deploy
     decision can read the delta without compiling twice — Table 4's
     RAM/flash story transposed to the serving tier.
 
-    The decode signature is ``(params, cache, token, position, write_idx,
-    kv_len)`` — ``kv_len`` (slots,) is the scheduler's per-slot fill the
-    flash-decode kernel bounds its KV sweep with (0 = idle slot).
+    The decode signature is ``(params, cache, token, position, kv_len)``
+    — with pad-free chunked admission a cache row's index equals its
+    entry's absolute position, so the old separate ``write_idx`` operand
+    is gone; ``kv_len`` (slots,) is the scheduler's exact per-slot fill
+    (``position + 1``; 0 = idle or mid-prefill slot, whose row the step
+    neither reads nor writes).
     """
     from repro.serve.kvcache import abstract_decode_cache, decode_cache_nbytes
     from repro.serve.serve_step import make_slot_decode_step
@@ -141,7 +144,7 @@ def compile_serve_decode(cfg, params, *, slots: int, capacity: int,
     suffix = ""
     if policy is not None and policy.weights == "int8":
         suffix = "-int8"
-    art = compile_fn(step, params_abs, cache_abs, vec, vec, vec, vec,
+    art = compile_fn(step, params_abs, cache_abs, vec, vec, vec,
                      name=f"{cfg.name}-decode-b{slots}-s{capacity}{suffix}")
     art.memory["kv_cache_bytes"] = decode_cache_nbytes(cache_abs)
     art.memory["kv_cache_bytes_float"] = (

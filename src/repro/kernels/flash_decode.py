@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: flash-decoding over the slot-addressed KV cache.
+"""Pallas TPU kernels: flash-decoding and chunk-prefill attention over
+the slot-addressed KV cache.
 
 One-token decode attention for the serving tier: every generated token
 streams the KV cache exactly once, in its stored precision.  Grid is
@@ -17,8 +18,9 @@ Three things distinguish this from the prefill flash kernel:
   position −1).  Blocks entirely past it are skipped: their compute is
   predicated off AND their index map is clamped to the last live block,
   so the pipeline elides the HBM→VMEM copy.  Capacity is sized for
-  ``max_bucket + max_new_cap`` but typical requests fill a fraction of
-  it; decode HBM traffic tracks actual occupancy, not capacity.
+  ``max_prompt + max_new_cap`` but typical requests fill a fraction of
+  it; decode HBM traffic tracks actual occupancy, not capacity — and
+  with pad-free chunked admission the fill is exactly the live tokens.
 * **Fused Int8KV dequant** — int8 values and their per-(entry, head)
   f32 scales are read and dequantized inside the VMEM tile; decode never
   materializes a float copy of the cache.
@@ -27,6 +29,13 @@ Masking is identical to the jnp ref: stored position −1 is invalid,
 ``pos <= q_pos`` (causal), and ``pos > q_pos - window`` for sliding-
 window layers.  A slot with no valid entries (kv_len == 0, or all
 positions −1) produces zeros, matching ``ref.decode_attention_ref``.
+
+``flash_chunk_prefill`` is the C-query sibling serving chunked pad-free
+admission: the q tile carries the whole chunk's grouped query rows
+(C × G), per-row query positions ride in a VMEM operand (causality
+across the chunk is pure position masking — the chunk's KV is already
+in the cache), and the kv_len bounding / in-tile Int8KV dequant are
+shared with the decode kernel.
 """
 from __future__ import annotations
 
@@ -189,3 +198,150 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
         interpret=interpret,
     )(q_pos.astype(jnp.int32), kv_len.astype(jnp.int32), *operands)
+
+
+# ---------------------------------------------------------------------------
+# Chunk-prefill attention (C queries per slot, cache-resident KV)
+# ---------------------------------------------------------------------------
+def _chunk_kernel(kl_ref, qp_ref, q_ref, k_ref, v_ref, pos_ref, *rest,
+                  scale: float, bk: int, n_k: int, window: int, int8: bool):
+    if int8:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kvl = kl_ref[bi]
+
+    @pl.when(ki * bk < kvl)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (R, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bk, D)
+        if int8:
+            k = k * ks_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        pos = pos_ref[...]                                   # (1, bk) int32
+        qp = qp_ref[0][:, None]                              # (R, 1) int32
+        idx = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        # pad query rows (qp == −1) have no valid key: pos >= 0 and
+        # pos <= −1 can't both hold, so they finalize to exact zeros.
+        valid = (pos >= 0) & (pos <= qp) & (idx < kvl)
+        if window > 0:
+            valid &= pos > qp - window
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None]) * valid.astype(jnp.float32)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        m_ref[...] = m_new
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if int8:
+            v = v * vs_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "block_k", "interpret"))
+def flash_chunk_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
+                        q_pos: jax.Array, cache_pos: jax.Array,
+                        kv_len: jax.Array,
+                        *, k_scale: Optional[jax.Array] = None,
+                        v_scale: Optional[jax.Array] = None,
+                        window: int = 0, block_k: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B, Hkv, R, D) grouped chunk queries — R = C·G rows ordered
+    (query, group), i.e. row ``c*G + g``; q_pos: (B, R) per-row absolute
+    query positions, already G-repeated (−1 marks a pad query row, which
+    returns exact zeros).  k/v: (B, S, Hkv, D) float — or int8 with
+    ``k_scale``/``v_scale`` (B, S, Hkv) f32 scales.  cache_pos: (B, S)
+    stored positions (−1 invalid); kv_len: (B,) per-slot post-write fill
+    bounding the KV sweep (use S for "scan everything").  Returns
+    (B, Hkv, R, D) in q.dtype.
+
+    The chunk's own KV must already be resident in the cache (written at
+    its rows, or concatenated for ring layouts): in-chunk causality is
+    decided purely by ``pos <= q_pos``, identical to the decode kernel.
+    """
+    b, hkv, r, d = q.shape
+    s = k.shape[1]
+    bk = min(block_k, s)
+    while s % bk and bk > 8:
+        bk //= 2
+    pad = (-s) % bk
+    if pad:
+        k = _pad_seq(k, pad, 1)
+        v = _pad_seq(v, pad, 1)
+        k_scale = _pad_seq(k_scale, pad, 1)
+        v_scale = _pad_seq(v_scale, pad, 1)
+        cache_pos = _pad_seq(cache_pos, pad, 1, value=-1)
+    n_k = (s + pad) // bk
+    int8 = k_scale is not None
+
+    def q_index(bi, hi, ki, kl):
+        return (bi, hi, 0, 0)
+
+    def qp_index(bi, hi, ki, kl):
+        return (bi, 0)
+
+    def _clamp(bi, ki, kl):
+        last_live = jnp.maximum(pl.cdiv(kl[bi], bk) - 1, 0)
+        return jnp.minimum(ki, last_live)
+
+    def kv_index(bi, hi, ki, kl):
+        return (bi, _clamp(bi, ki, kl), hi, 0)
+
+    def pos_index(bi, hi, ki, kl):
+        return (bi, _clamp(bi, ki, kl))
+
+    def scale_index(bi, hi, ki, kl):
+        return (bi, _clamp(bi, ki, kl), hi)
+
+    in_specs = [
+        pl.BlockSpec((1, r), qp_index),
+        pl.BlockSpec((1, 1, r, d), q_index),
+        pl.BlockSpec((1, bk, 1, d), kv_index),
+        pl.BlockSpec((1, bk, 1, d), kv_index),
+        pl.BlockSpec((1, bk), pos_index),
+    ]
+    operands = [q_pos.astype(jnp.int32), q, k, v, cache_pos]
+    if int8:
+        in_specs += [pl.BlockSpec((1, bk, 1), scale_index),
+                     pl.BlockSpec((1, bk, 1), scale_index)]
+        operands += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, n_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, r, d), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((r,), jnp.float32),       # running max
+            pltpu.VMEM((r,), jnp.float32),       # running sum
+            pltpu.VMEM((r, d), jnp.float32),     # output accumulator
+        ])
+    kernel = functools.partial(
+        _chunk_kernel, scale=d ** -0.5, bk=bk, n_k=n_k, window=window,
+        int8=int8)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, r, d), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), *operands)

@@ -149,6 +149,52 @@ def decode_attention(q, k_cache, v_cache, q_position, cache_positions, *,
     return out.reshape(b, 1, hq, d)
 
 
+def chunk_attention(q, k_cache, v_cache, q_positions, cache_positions, *,
+                    window: int = 0,
+                    kv_len: Optional[jax.Array] = None,
+                    force: Optional[str] = None) -> jax.Array:
+    """Chunk-prefill attention: C query tokens per slot against the
+    slot-addressed KV cache (the admission path of chunked pad-free
+    prefill; ``decode_attention`` is the C == 1 case).
+
+    q: (B, C, Hq, D); ``k_cache``/``v_cache``: (B, Skv, Hkv, D) float
+    arrays or ``Int8KV`` pairs; q_positions: (B, C) absolute positions
+    (−1 marks pad queries in a ragged final chunk — their outputs are
+    exact zeros, discarded by the caller); cache_positions: (B, Skv).
+
+    The chunk's own KV must already be resident (written into the cache
+    rows, or concatenated for ring layouts) — in-chunk causality is pure
+    position masking.  ``kv_len`` (B,) is the post-write fill ``p + C``:
+    blocks past it are skipped by the kernel exactly as in decode.
+    """
+    path = resolve_path(force)
+    if isinstance(k_cache, Int8KV):
+        k, k_scale = k_cache.q, k_cache.scale
+        v, v_scale = v_cache.q, v_cache.scale
+    else:
+        k, v, k_scale, v_scale = k_cache, v_cache, None, None
+    if path == "ref":
+        return ref.chunk_attention_ref(
+            q, k, v, q_positions, cache_positions, window=window,
+            kv_len=kv_len, k_scale=k_scale, v_scale=v_scale)
+    b, c, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    if kv_len is None:
+        kv_len = jnp.full((b,), k.shape[1], jnp.int32)
+    # grouped rows ordered (query, group): row c*G + g shares KV head h
+    qg = q.reshape(b, c, hkv, g, d).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, hkv, c * g, d)
+    qp_rows = jnp.broadcast_to(q_positions[:, :, None],
+                               (b, c, g)).reshape(b, c * g)
+    out = fd.flash_chunk_prefill(
+        qg, k, v, qp_rows.astype(jnp.int32), cache_positions, kv_len,
+        k_scale=k_scale, v_scale=v_scale, window=window,
+        interpret=(path == "interpret"))
+    return out.reshape(b, hkv, c, g, d).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, c, hq, d)
+
+
 def mamba_scan(x, dt, b_mat, c_mat, a, *, force: Optional[str] = None
                ) -> Tuple[jax.Array, jax.Array]:
     path = resolve_path(force)

@@ -78,12 +78,49 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     float copy of the whole cache.  When the cache's seq dim is sharded
     over mesh axes ("flash decoding"), SPMD turns the max/sum reductions
     into the partial-softmax collectives.
+
+    Decode is the C == 1 case of chunk-prefill attention, so this is a
+    thin delegation to ``chunk_attention_ref`` — one oracle owns the
+    masking/softmax contract (the equivalence is additionally pinned by
+    ``tests/test_chunked_prefill.py::test_chunk_attention_c1_matches_decode``).
     """
-    b, _, hq, d = q.shape
+    return chunk_attention_ref(
+        q, k, v, q_position[:, None], cache_positions, window=window,
+        kv_len=kv_len, k_scale=k_scale, v_scale=v_scale, block_k=block_k)
+
+
+# ---------------------------------------------------------------------------
+# chunk-prefill attention (C query tokens against a slot-addressed KV cache)
+# ---------------------------------------------------------------------------
+def chunk_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        q_positions: jax.Array, cache_positions: jax.Array,
+                        *, window: int = 0,
+                        kv_len: Optional[jax.Array] = None,
+                        k_scale: Optional[jax.Array] = None,
+                        v_scale: Optional[jax.Array] = None,
+                        block_k: int = 256) -> jax.Array:
+    """Chunked pad-free prefill attention — the jnp einsum oracle of
+    ``flash_chunk_prefill`` and the C-query generalization of
+    ``decode_attention_ref``.
+
+    q: (B, C, Hq, D) chunk queries; k/v: (B, Skv, Hkv, D) float — or int8
+    values with ``k_scale``/``v_scale`` (B, Skv, Hkv) f32 per-(entry,
+    head) scales; q_positions: (B, C) absolute positions (−1 marks a pad
+    query in a ragged final chunk — its row returns exactly zeros);
+    cache_positions: (B, Skv) stored positions with −1 invalid; ``kv_len``
+    optionally bounds the per-row live cache region by index (the serving
+    tier passes the post-write fill ``p + C``).
+
+    The caller writes the chunk's own KV into the cache (or concatenates
+    it, for ring layouts) *before* calling, so in-chunk causality is pure
+    position masking: key position <= query position.  Grouped-q einsum
+    and per-tile int8 dequant follow ``decode_attention_ref``.
+    """
+    b, c, hq, d = q.shape
     skv, hkv = k.shape[1], k.shape[2]
     g = hq // hkv
     scale = d ** -0.5
-    qg = (q * scale).reshape(b, hkv, g, d)
+    qg = (q * scale).reshape(b, c, hkv, g, d)
     out_dtype = v.dtype if v_scale is None else q.dtype
 
     bk = min(block_k, skv)
@@ -102,53 +139,51 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     def tiles(x):
         return jnp.moveaxis(x.reshape(b, n_b, bk, *x.shape[2:]), 1, 0)
 
-    # scores (B, Hkv, G, Skv) f32 — K dequantized per tile when int8
+    # scores (B, C, Hkv, G, Skv) f32 — K dequantized per tile when int8
     if k_scale is None:
-        s = jnp.einsum("bhgd,bkhd->bhgk", qg, k,
+        s = jnp.einsum("bchgd,bkhd->bchgk", qg, k,
                        preferred_element_type=jnp.float32)
     else:
         def score_tile(_, inp):
             kq, ks = inp
             kf = (kq.astype(jnp.float32) * ks[..., None]).astype(q.dtype)
-            return None, jnp.einsum("bhgd,bkhd->bhgk", qg, kf,
+            return None, jnp.einsum("bchgd,bkhd->bchgk", qg, kf,
                                     preferred_element_type=jnp.float32)
         _, s_tiles = jax.lax.scan(score_tile, None,
                                   (tiles(k), tiles(k_scale)))
-        s = jnp.moveaxis(s_tiles, 0, 3).reshape(b, hkv, g, sp)
+        s = jnp.moveaxis(s_tiles, 0, 4).reshape(b, c, hkv, g, sp)
 
-    kp = cache_positions
-    valid = kp >= 0
-    valid &= kp <= q_position[:, None]
+    kp = cache_positions[:, None, :]                       # (B, 1, Skv)
+    qp = q_positions[:, :, None]                           # (B, C, 1)
+    valid = (kp >= 0) & (kp <= qp)
     if window > 0:
-        valid &= kp > (q_position[:, None] - window)
+        valid &= kp > qp - window
     if kv_len is not None:
-        idx = jnp.arange(sp, dtype=jnp.int32)[None, :]
-        valid &= idx < kv_len[:, None].astype(jnp.int32)
-    vmask = valid[:, None, None, :]
+        idx = jnp.arange(sp, dtype=jnp.int32)[None, None, :]
+        valid &= idx < kv_len[:, None, None].astype(jnp.int32)
+    vmask = valid[:, :, None, None, :]                     # (B,C,1,1,Skv)
     s = jnp.where(vmask, s, NEG_INF)
 
-    # masked softmax: identical to jax.nn.softmax wherever a row has at
-    # least one valid key; rows with none produce exactly 0 (the kernel's
-    # empty-slot contract) instead of a garbage mean over NEG_INF scores.
+    # masked softmax: a query row with no valid key (a pad query, or an
+    # empty cache) produces exactly 0 instead of a garbage mean.
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m) * vmask
     l = jnp.sum(p, axis=-1, keepdims=True)
     p = p / jnp.where(l == 0.0, 1.0, l)
 
     if v_scale is None:
-        o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v.dtype), v)
+        o = jnp.einsum("bchgk,bkhd->bchgd", p.astype(v.dtype), v)
     else:
         def pv_tile(acc, inp):
             pt, vq, vs = inp
             vf = (vq.astype(jnp.float32) * vs[..., None]).astype(q.dtype)
-            pv = jnp.einsum("bhgk,bkhd->bhgd", pt.astype(q.dtype), vf)
+            pv = jnp.einsum("bchgk,bkhd->bchgd", pt.astype(q.dtype), vf)
             return acc + pv.astype(jnp.float32), None
-        p_tiles = jnp.moveaxis(
-            p.reshape(b, hkv, g, n_b, bk), 3, 0)
-        acc0 = jnp.zeros((b, hkv, g, d), jnp.float32)
+        p_tiles = jnp.moveaxis(p.reshape(b, c, hkv, g, n_b, bk), 4, 0)
+        acc0 = jnp.zeros((b, c, hkv, g, d), jnp.float32)
         o, _ = jax.lax.scan(pv_tile, acc0,
                             (p_tiles, tiles(v), tiles(v_scale)))
-    return o.reshape(b, 1, hq, d).astype(out_dtype)
+    return o.reshape(b, c, hq, d).astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------

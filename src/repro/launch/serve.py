@@ -27,6 +27,9 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="chunked pad-free admission: prompt tokens per"
+                         " prefill chunk step (docs/scheduling.md)")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--artifact", action="store_true",
                     help="decode via AOT CompiledArtifact (EON-style)")
@@ -41,13 +44,14 @@ def main() -> None:
     params = init_params(cfg, jax.random.key(0))
     if args.engine == "static":
         server = StaticBatchServer(cfg, params, batch_size=args.slots,
-                                   prompt_len=args.prompt_len,
+                                   max_prompt=args.prompt_len,
+                                   prefill_chunk=args.prefill_chunk,
                                    max_new_tokens=args.max_new,
                                    precision=args.precision)
     else:
         server = ContinuousBatchServer(
-            cfg, params, slots=args.slots,
-            buckets=(args.prompt_len // 2, args.prompt_len),
+            cfg, params, slots=args.slots, max_prompt=args.prompt_len,
+            prefill_chunk=args.prefill_chunk,
             max_new_tokens=args.max_new, use_artifact=args.artifact,
             precision=args.precision)
     rng = np.random.RandomState(0)

@@ -21,14 +21,16 @@ class ModelFns(NamedTuple):
     forward_train: Callable
     forward_prefill: Callable
     forward_decode: Callable
+    forward_prefill_chunk: Callable
 
 
 def model_fns(cfg: ArchConfig) -> ModelFns:
     if cfg.is_encdec:
         return ModelFns(encdec.forward_train, encdec.forward_prefill,
-                        encdec.forward_decode)
+                        encdec.forward_decode, encdec.forward_prefill_chunk)
     return ModelFns(transformer.forward_train, transformer.forward_prefill,
-                    transformer.forward_decode)
+                    transformer.forward_decode,
+                    transformer.forward_prefill_chunk)
 
 
 # ---------------------------------------------------------------------------

@@ -16,9 +16,11 @@ from jax import lax
 from repro.core.arch import ArchConfig
 from repro.core.quantize import PrecisionPolicy, maybe_quant_kv
 from repro.kernels.ops import quant_matmul
-from repro.models.layers import (attention_decode_layer, attention_layer,
+from repro.models.layers import (attention_chunk_layer,
+                                 attention_decode_layer, attention_layer,
                                  rms_norm, swiglu_mlp)
-from repro.models.transformer import (_maybe_remat, default_positions,
+from repro.models.transformer import (_maybe_remat, _write_pos,
+                                      _write_pos_chunk, default_positions,
                                       embed_tokens, lm_loss,
                                       maybe_cast_params, unembed)
 from repro.sharding.policy import constrain
@@ -133,18 +135,21 @@ def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
                    policy: Optional[PrecisionPolicy] = None,
                    kv_len=None):
     """``kv_len`` bounds the decoder self-attn cache rows (serving
-    contract, see transformer.forward_decode); cross-attn KV is the
-    fixed-length encoder output and is never bounded."""
+    contract, see transformer.forward_decode; ``kv_len == 0`` rows also
+    suppress their cache writes); cross-attn KV is the fixed-length
+    encoder output and is never bounded."""
     params = maybe_cast_params(params, cfg)
     x = embed_tokens(params, token[:, None], cfg)
     widx = position if write_idx is None else write_idx
+    active = None if kv_len is None else kv_len > 0
 
     def body(h, pc):
         p, ck, cv, xk, xv = pc
         hh = rms_norm(p["attn_norm"], h, cfg.norm_eps)
         attn_out, ck, cv, _ = attention_decode_layer(
             p["attn"], hh, position, ck, cv, cache["full_pos"], widx,
-            policy=policy, kv_len=kv_len, **_attn_kwargs(cfg))
+            policy=policy, kv_len=kv_len, active=active,
+            **_attn_kwargs(cfg))
         h = h + attn_out
         hh = rms_norm(p["xattn_norm"], h, cfg.norm_eps)
         x_out, _, _, _ = attention_decode_layer(
@@ -161,7 +166,87 @@ def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     logits = unembed(params, x, cfg)[:, 0]
     new_cache = dict(cache, k=ks, v=vs)
-    new_cache["full_pos"] = jax.vmap(
-        lambda cp, pv, i: lax.dynamic_update_slice_in_dim(cp, pv[None], i, 0)
-    )(cache["full_pos"], position, widx)
+    new_cache["full_pos"] = _write_pos(cache["full_pos"], position, widx,
+                                       active)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked pad-free prefill (decoder side; the encoder always runs once)
+# ---------------------------------------------------------------------------
+def init_chunk_cache(cfg: ArchConfig, params, enc_embeddings: jax.Array,
+                     capacity: int,
+                     policy: Optional[PrecisionPolicy] = None):
+    """Empty decoder cache of ``capacity`` rows with the cross-attn KV
+    precomputed: run the encoder once, project its output, and leave the
+    self-attn K/V zeroed with positions −1 (invalid).  The starting
+    point for ``forward_prefill_chunk``."""
+    params = maybe_cast_params(params, cfg)
+    enc_out = encode(cfg, params, enc_embeddings, policy=policy)
+    b, s_enc = enc_out.shape[:2]
+    hd = cfg.resolved_head_dim
+
+    def project(p):
+        xk = quant_matmul(enc_out, p["xattn"]["wk"], policy=policy).reshape(
+            b, s_enc, cfg.n_kv_heads, hd)
+        xv = quant_matmul(enc_out, p["xattn"]["wv"], policy=policy).reshape(
+            b, s_enc, cfg.n_kv_heads, hd)
+        return xk, xv
+
+    _, (xks, xvs) = lax.scan(lambda c, p: (c, project(p)), None,
+                             params["blocks"])
+    n_layers = jax.tree.leaves(params["blocks"])[0].shape[0]
+    kv = jnp.zeros((n_layers, b, capacity, cfg.n_kv_heads, hd),
+                   cfg.activation_dtype)
+    cache = {"k": kv, "v": kv,
+             "xk": xks, "xv": xvs,
+             "full_pos": jnp.full((b, capacity), -1, jnp.int32),
+             "enc_pos": default_positions(cfg, b, s_enc)}
+    if policy is not None and policy.kv_cache == "int8":
+        for key in ("k", "v", "xk", "xv"):
+            cache[key] = maybe_quant_kv(policy, cache[key])
+    return cache
+
+
+def forward_prefill_chunk(cfg: ArchConfig, params, cache,
+                          tokens: jax.Array, positions: jax.Array,
+                          policy: Optional[PrecisionPolicy] = None,
+                          kv_len=None):
+    """One decoder prefill chunk against a live cache built by
+    ``init_chunk_cache`` (see transformer.forward_prefill_chunk for the
+    chunk contract): self-attention writes the chunk unpadded and
+    attends the live prefix; cross-attention reads the fixed encoder KV.
+    """
+    params = maybe_cast_params(params, cfg)
+    x = embed_tokens(params, tokens, cfg)
+    write_full = positions[:, 0]
+
+    def body(h, pc):
+        p, ck, cv, xk, xv = pc
+        hh = rms_norm(p["attn_norm"], h, cfg.norm_eps)
+        attn_out, ck, cv, _ = attention_chunk_layer(
+            p["attn"], hh, positions, ck, cv, cache["full_pos"], write_full,
+            policy=policy, kv_len=kv_len, **_attn_kwargs(cfg))
+        h = h + attn_out
+        hh = rms_norm(p["xattn_norm"], h, cfg.norm_eps)
+        # cross attention: no rope on the queries (matches the one-shot
+        # prefill's kv_override path and the decode cross branch)
+        xkw = dict(_attn_kwargs(cfg))
+        xkw["rope_variant"] = "none"
+        x_out, _, _, _ = attention_chunk_layer(
+            p["xattn"], hh, positions, xk, xv, cache["enc_pos"], write_full,
+            cross=True, policy=policy, **xkw)
+        h = h + x_out
+        hh = rms_norm(p["mlp_norm"], h, cfg.norm_eps)
+        h = h + swiglu_mlp(p["mlp"], hh, policy)
+        return h, (ck, cv)
+
+    x, (ks, vs) = lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    new_cache = dict(cache, k=ks, v=vs)
+    new_cache["full_pos"] = _write_pos_chunk(cache["full_pos"], positions,
+                                             write_full)
     return logits, new_cache

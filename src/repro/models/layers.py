@@ -31,7 +31,7 @@ from jax import lax
 from repro import flags
 from repro.core.quantize import (Int8KV, PrecisionPolicy, dequant_kv,
                                  quant_kv)
-from repro.kernels.ops import decode_attention, quant_matmul
+from repro.kernels.ops import chunk_attention, decode_attention, quant_matmul
 from repro.sharding.policy import constrain
 
 NEG_INF = -1e30
@@ -154,8 +154,7 @@ def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
     positions are (B, S) absolute indices (mask is position-based so the
     same code serves packed/shifted sequences and cache decoding).
-    Negative key positions mark invalid entries (left-pad tokens in a
-    serving bucket) and are never attended.
+    Negative key positions mark invalid entries and are never attended.
     """
     scale = q.shape[-1] ** -0.5
     scores = _gqa_scores(q * scale, k)                       # (B,Hq,Sq,Sk) f32
@@ -332,7 +331,8 @@ def attention_decode_layer(p: dict, x: jax.Array, position: jax.Array,
                            mrope_sections, window: int = 0,
                            cross: bool = False,
                            policy: Optional[PrecisionPolicy] = None,
-                           kv_len: Optional[jax.Array] = None):
+                           kv_len: Optional[jax.Array] = None,
+                           active: Optional[jax.Array] = None):
     """One decode step.  x: (B, 1, d); position: (B,) absolute position;
     write_idx: (B,) slot to write KV into (ring index for sliding caches).
 
@@ -348,6 +348,12 @@ def attention_decode_layer(p: dict, x: jax.Array, position: jax.Array,
     index (the serving tier's per-slot high-water mark); sliding-window
     ring caches derive their own bound from ``position`` (ring fill is a
     prefix of length min(position + 1, window)).
+
+    ``active`` (B,) bool optionally predicates the cache writes: rows
+    with ``active == False`` (idle serving slots, and slots mid-chunked-
+    prefill) write their *existing* entry back, so a decode step can
+    never scribble into a row another phase owns.  ``None`` writes
+    unconditionally (single-sequence decode).
 
     Returns (out, new_cache_k, new_cache_v, new_cache_positions).
     """
@@ -375,9 +381,17 @@ def attention_decode_layer(p: dict, x: jax.Array, position: jax.Array,
         k = apply_rope(k, position[:, None], rope_theta)
 
     def upd(cache, new):
-        return jax.vmap(
-            lambda c, n, i: lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
-        )(cache, new, write_idx)
+        if active is None:
+            return jax.vmap(
+                lambda c, n, i: lax.dynamic_update_slice_in_dim(c, n, i,
+                                                                axis=0)
+            )(cache, new, write_idx)
+
+        def one(c, n, i, a):
+            old = lax.dynamic_slice_in_dim(c, i, n.shape[0], axis=0)
+            return lax.dynamic_update_slice_in_dim(
+                c, jnp.where(a, n, old), i, axis=0)
+        return jax.vmap(one)(cache, new, write_idx, active)
 
     if isinstance(cache_k, Int8KV):
         qk, qv = quant_kv(k), quant_kv(v)
@@ -390,10 +404,7 @@ def attention_decode_layer(p: dict, x: jax.Array, position: jax.Array,
             v = dequant_kv(quant_kv(v), v.dtype)
         cache_k = upd(cache_k, k)
         cache_v = upd(cache_v, v)
-    cache_positions = jax.vmap(
-        lambda cp, pos, i: lax.dynamic_update_slice_in_dim(
-            cp, pos[None], i, axis=0)
-    )(cache_positions, position, write_idx)
+    cache_positions = upd(cache_positions, position[:, None])
     cache_k = _constrain_decode_kv(cache_k)
     cache_v = _constrain_decode_kv(cache_v)
     s_kv = cache_positions.shape[1]
@@ -409,6 +420,155 @@ def attention_decode_layer(p: dict, x: jax.Array, position: jax.Array,
     o = decode_attention(q, cache_k, cache_v, position,
                          cache_positions, window=window, kv_len=bound)
     out = quant_matmul(o.reshape(b, 1, n_heads * head_dim), p["wo"],
+                       policy=policy)
+    return out, cache_k, cache_v, cache_positions
+
+
+def ring_scatter_idx(positions: jax.Array, window: int) -> jax.Array:
+    """Ring write targets for a prefill chunk.  positions: (B, C)
+    absolute chunk positions (−1 pad).  Returns (B, C) scatter indices
+    into a ``window``-row ring: entry i lands at ``pos % window``; pad
+    entries and entries older than the chunk's last ``window`` real
+    tokens (which would collide with a newer in-chunk winner) are routed
+    to index ``window`` — out of bounds, dropped by the scatter.
+    """
+    b, c = positions.shape
+    valid = positions >= 0
+    n_valid = valid.sum(axis=1, keepdims=True)               # (B, 1)
+    i = jnp.broadcast_to(jnp.arange(c, dtype=positions.dtype)[None, :],
+                         (b, c))
+    winner = valid & (i >= n_valid - window)
+    return jnp.where(winner, positions % window, window).astype(jnp.int32)
+
+
+def _ring_scatter(cache: jax.Array, new: jax.Array, idx: jax.Array):
+    """Per-row scatter of chunk entries into a ring cache.  cache:
+    (B, w, ...), new: (B, C, ...), idx: (B, C) with out-of-bounds ==
+    dropped (see ``ring_scatter_idx``)."""
+    return jax.vmap(lambda c, n, i: c.at[i].set(n.astype(c.dtype)))(
+        cache, new, idx)
+
+
+def attention_chunk_layer(p: dict, x: jax.Array, positions: jax.Array,
+                          cache_k, cache_v,
+                          cache_positions: jax.Array, write_idx: jax.Array, *,
+                          n_heads: int, n_kv_heads: int, head_dim: int,
+                          rope_variant: str, rope_theta: float,
+                          mrope_sections, window: int = 0,
+                          cross: bool = False,
+                          policy: Optional[PrecisionPolicy] = None,
+                          kv_len: Optional[jax.Array] = None):
+    """One chunk-prefill step: C tokens written unpadded into the slot's
+    cache rows, attending over the slot's live KV prefix plus themselves.
+
+    x: (B, C, d); positions: (B, C) absolute positions, −1 marking the
+    pad tail of a ragged final chunk (pad entries are written with
+    position −1 — invalid — and their outputs are discarded).
+
+    * ``window == 0`` (full/global cache): the chunk's K/V is written at
+      rows ``[write_idx, write_idx + C)`` *first*, then the chunk queries
+      attend the cache bounded by ``kv_len`` (the post-write fill) — the
+      rows ahead of the fill are dead by the slot contract, so the write
+      is safe and in-chunk causality is pure position masking.
+    * ``window > 0`` (ring cache): writing first would let early chunk
+      entries overwrite ring history late queries still need, so the
+      chunk attends ``[ring cache ∥ chunk]`` concatenated, then the last
+      ``window`` real entries are scattered into their ``pos % window``
+      slots (older ones can never be attended again).
+
+    Int8KV caches quantize the chunk per (entry, head) before the write/
+    concat — the fake-quant policy mirrors the round-trip in float, which
+    is what keeps int8 chunked serving testable token-exact.
+
+    Returns (out (B, C, d), new_cache_k, new_cache_v, new_cache_positions).
+    """
+    b, c, _ = x.shape
+    q = quant_matmul(x, p["wq"], policy=policy).reshape(
+        b, c, n_heads, head_dim)
+    if cross:
+        # Cross attention: cache holds encoder KV; nothing is written and
+        # every (non-pad) query may attend every encoder entry.
+        if rope_variant != "none":
+            q = (apply_mrope(q, jnp.broadcast_to(positions[..., None],
+                                                 (b, c, 3)),
+                             rope_theta, mrope_sections)
+                 if rope_variant == "mrope"
+                 else apply_rope(q, positions, rope_theta))
+        q_valid = jnp.where(positions >= 0, 2 ** 30, -1)
+        o = chunk_attention(q, cache_k, cache_v, q_valid, cache_positions)
+        out = quant_matmul(o.reshape(b, c, n_heads * head_dim), p["wo"],
+                           policy=policy)
+        return out, cache_k, cache_v, cache_positions
+    k = quant_matmul(x, p["wk"], policy=policy).reshape(
+        b, c, n_kv_heads, head_dim)
+    v = quant_matmul(x, p["wv"], policy=policy).reshape(
+        b, c, n_kv_heads, head_dim)
+    if rope_variant == "mrope":
+        pos3 = jnp.broadcast_to(positions[..., None], (b, c, 3))
+        q = apply_mrope(q, pos3, rope_theta, mrope_sections)
+        k = apply_mrope(k, pos3, rope_theta, mrope_sections)
+    elif rope_variant == "rope":
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+
+    if (policy is not None and policy.kv_cache == "int8"
+            and policy.compute == "fake_quant"
+            and not isinstance(cache_k, Int8KV)):
+        k = dequant_kv(quant_kv(k), k.dtype)
+        v = dequant_kv(quant_kv(v), v.dtype)
+
+    if window > 0:
+        # ring: attend [cache ∥ chunk], then scatter the winners in
+        if isinstance(cache_k, Int8KV):
+            qk, qv = quant_kv(k), quant_kv(v)
+            k_all = Int8KV(jnp.concatenate([cache_k.q, qk.q], axis=1),
+                           jnp.concatenate([cache_k.scale, qk.scale],
+                                           axis=1))
+            v_all = Int8KV(jnp.concatenate([cache_v.q, qv.q], axis=1),
+                           jnp.concatenate([cache_v.scale, qv.scale],
+                                           axis=1))
+        else:
+            k_all = jnp.concatenate([cache_k, k.astype(cache_k.dtype)],
+                                    axis=1)
+            v_all = jnp.concatenate([cache_v, v.astype(cache_v.dtype)],
+                                    axis=1)
+        pos_all = jnp.concatenate([cache_positions, positions], axis=1)
+        o = chunk_attention(q, k_all, v_all, positions, pos_all,
+                            window=window)
+        idx = ring_scatter_idx(positions, window)
+        if isinstance(cache_k, Int8KV):
+            cache_k = Int8KV(_ring_scatter(cache_k.q, qk.q, idx),
+                             _ring_scatter(cache_k.scale, qk.scale, idx))
+            cache_v = Int8KV(_ring_scatter(cache_v.q, qv.q, idx),
+                             _ring_scatter(cache_v.scale, qv.scale, idx))
+        else:
+            cache_k = _ring_scatter(cache_k, k, idx)
+            cache_v = _ring_scatter(cache_v, v, idx)
+        cache_positions = _ring_scatter(cache_positions, positions, idx)
+    else:
+        def upd(cache, new):
+            return jax.vmap(
+                lambda cc, n, i: lax.dynamic_update_slice_in_dim(
+                    cc, n.astype(cc.dtype), i, axis=0)
+            )(cache, new, write_idx)
+
+        if isinstance(cache_k, Int8KV):
+            qk, qv = quant_kv(k), quant_kv(v)
+            cache_k = Int8KV(upd(cache_k.q, qk.q),
+                             upd(cache_k.scale, qk.scale))
+            cache_v = Int8KV(upd(cache_v.q, qv.q),
+                             upd(cache_v.scale, qv.scale))
+        else:
+            cache_k = upd(cache_k, k)
+            cache_v = upd(cache_v, v)
+        cache_positions = upd(cache_positions, positions)
+        s_kv = cache_positions.shape[1]
+        bound = None if kv_len is None else jnp.clip(kv_len, 0, s_kv)
+        o = chunk_attention(q, cache_k, cache_v, positions,
+                            cache_positions, kv_len=bound)
+    cache_k = _constrain_decode_kv(cache_k)
+    cache_v = _constrain_decode_kv(cache_v)
+    out = quant_matmul(o.reshape(b, c, n_heads * head_dim), p["wo"],
                        policy=policy)
     return out, cache_k, cache_v, cache_positions
 

@@ -33,6 +33,35 @@ class SSMState(NamedTuple):
     h: jax.Array      # mamba1: (B, di, ds); mamba2: (B, nh, P, ds)
 
 
+def _mask_dt(dt: jax.Array, mask: jax.Array | None) -> jax.Array:
+    """Zero the step size at masked (pad) steps: ``dt == 0`` makes the
+    recurrence an exact identity (decay ``exp(0·a) == 1``, input term
+    ``dt·x·b == 0``), so a ragged chunk's pad tail never touches the
+    carried state — the discipline chunked pad-free prefill relies on."""
+    if mask is None:
+        return dt
+    return dt * mask.astype(dt.dtype)[..., None]
+
+
+def _conv_state(prev: jax.Array | None, xin: jax.Array, k: int,
+                fill: jax.Array | None) -> jax.Array:
+    """Next rolling conv window: the last ``k−1`` *real* inputs.
+
+    prev: (B, k−1, di) carry-in (zeros when None); xin: (B, S, di);
+    ``fill`` (B,) counts the real (non-pad) inputs per row — pad rows sit
+    at the tail, so the window is ``cat[fill : fill + k − 1]`` per row
+    (the static ``fill == S`` slice when no ragged chunk is in play)."""
+    bsz, s, di = xin.shape
+    if prev is None:
+        prev = jnp.zeros((bsz, k - 1, di), xin.dtype)
+    cat = jnp.concatenate([prev.astype(xin.dtype), xin], axis=1)
+    if fill is None:
+        return lax.dynamic_slice_in_dim(cat, s, k - 1, axis=1)
+    return jax.vmap(
+        lambda row, n: lax.dynamic_slice_in_dim(row, n, k - 1, axis=0)
+    )(cat, fill.astype(jnp.int32))
+
+
 # ---------------------------------------------------------------------------
 # Depthwise causal conv (k taps as shifts — no conv primitive needed)
 # ---------------------------------------------------------------------------
@@ -68,9 +97,17 @@ def _ssm_scan_chunk(h0: jax.Array, decay: jax.Array, inp: jax.Array):
 
 
 def mamba1_layer(p: dict, x: jax.Array, cfg: ArchConfig,
-                 state: SSMState | None = None, chunk: int = 128
+                 state: SSMState | None = None, chunk: int = 128,
+                 mask: jax.Array | None = None,
+                 fill: jax.Array | None = None
                  ) -> Tuple[jax.Array, SSMState]:
-    """x: (B, S, d_model) -> (y, final_state)."""
+    """x: (B, S, d_model) -> (y, final_state).
+
+    ``mask`` (B, S) marks real steps (1) vs pad steps (0) and ``fill``
+    (B,) counts the real steps per row — both optional, supplied by the
+    chunked-prefill path so a ragged final chunk's pad tail leaves the
+    recurrent and conv state exactly where the last real token put them.
+    """
     bsz, s, _ = x.shape
     di, ds = cfg.d_inner, cfg.ssm_state
     xz = x @ p["in_proj"].astype(x.dtype)
@@ -79,16 +116,13 @@ def mamba1_layer(p: dict, x: jax.Array, cfg: ArchConfig,
 
     conv_tail = state.conv if state is not None else None
     xc = causal_conv(xin, p["conv_w"], p["conv_b"], conv_tail)
-    new_conv = lax.dynamic_slice_in_dim(
-        jnp.concatenate([state.conv if state is not None else
-                         jnp.zeros((bsz, cfg.d_conv - 1, di), x.dtype), xin],
-                        axis=1),
-        s, cfg.d_conv - 1, axis=1) if s >= 1 else None
+    new_conv = _conv_state(conv_tail, xin, cfg.d_conv, fill)
 
     dt_rank = p["x_dt"].shape[1]
     dt = jax.nn.softplus(
         (xc @ p["x_dt"].astype(xc.dtype)) @ p["dt_proj"].astype(xc.dtype)
         + p["dt_bias"].astype(xc.dtype))                       # (B,S,di)
+    dt = _mask_dt(dt, mask)
     bmat = xc @ p["wb"].astype(xc.dtype)                       # (B,S,ds)
     cmat = xc @ p["wc"].astype(xc.dtype)                       # (B,S,ds)
     a = -jnp.exp(p["a_log"].astype(jnp.float32))               # (di,ds)
@@ -159,9 +193,14 @@ def mamba1_decode(p: dict, x: jax.Array, cfg: ArchConfig,
 # Mamba2 — SSD chunked matmul form
 # ---------------------------------------------------------------------------
 def mamba2_layer(p: dict, x: jax.Array, cfg: ArchConfig,
-                 state: SSMState | None = None, chunk: int = 256
+                 state: SSMState | None = None, chunk: int = 256,
+                 mask: jax.Array | None = None,
+                 fill: jax.Array | None = None
                  ) -> Tuple[jax.Array, SSMState]:
-    """x: (B, S, d_model) -> (y, final_state).  Scalar decay per head."""
+    """x: (B, S, d_model) -> (y, final_state).  Scalar decay per head.
+
+    ``mask``/``fill`` as in ``mamba1_layer``: pad steps of a ragged
+    prefill chunk are exact no-ops on the carried state."""
     bsz, s, _ = x.shape
     di, ds = cfg.d_inner, cfg.ssm_state
     nh = cfg.resolved_ssm_heads
@@ -172,17 +211,14 @@ def mamba2_layer(p: dict, x: jax.Array, cfg: ArchConfig,
     xin = constrain(xin, ("act_batch", "act_seq", "act_dinner"))
     conv_tail = state.conv if state is not None else None
     xc = causal_conv(xin, p["conv_w"], p["conv_b"], conv_tail)
-    new_conv = lax.dynamic_slice_in_dim(
-        jnp.concatenate([state.conv if state is not None else
-                         jnp.zeros((bsz, cfg.d_conv - 1, di), x.dtype), xin],
-                        axis=1),
-        s, cfg.d_conv - 1, axis=1)
+    new_conv = _conv_state(conv_tail, xin, cfg.d_conv, fill)
 
     bmat = (x @ p["wb"].astype(x.dtype)).astype(jnp.float32)   # (B,S,ds)
     cmat = (x @ p["wc"].astype(x.dtype)).astype(jnp.float32)
     dt = jax.nn.softplus(
         (x @ p["dt_w"].astype(x.dtype)).astype(jnp.float32)
         + p["dt_bias"].astype(jnp.float32))                    # (B,S,nh)
+    dt = _mask_dt(dt, mask)
     a = -jnp.exp(p["a_log"].astype(jnp.float32))               # (nh,)
 
     n_chunks = max(s // chunk, 1)

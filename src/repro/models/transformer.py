@@ -23,7 +23,9 @@ from repro import flags
 from repro.core.arch import ArchConfig
 from repro.core.quantize import Int8KV, PrecisionPolicy, maybe_quant_kv
 from repro.models import ssm as ssm_mod
-from repro.models.layers import (attention_decode_layer, attention_layer,
+from repro.models.layers import (attention_chunk_layer,
+                                 attention_decode_layer, attention_layer,
+                                 ring_scatter_idx, _ring_scatter,
                                  rms_norm, swiglu_mlp)
 from repro.models.moe import moe_layer
 from repro.models.params import layer_pattern
@@ -151,11 +153,12 @@ def mamba_block(cfg: ArchConfig, p, x, state=None):
 
 def dense_block_decode(cfg: ArchConfig, p, x, position, cache_k, cache_v,
                        cache_pos, write_idx, *, window=0, policy=None,
-                       kv_len=None):
+                       kv_len=None, active=None):
     h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
     attn_out, ck, cv, cp = attention_decode_layer(
         p["attn"], h, position, cache_k, cache_v, cache_pos, write_idx,
-        policy=policy, kv_len=kv_len, **_attn_kwargs(cfg, window))
+        policy=policy, kv_len=kv_len, active=active,
+        **_attn_kwargs(cfg, window))
     x = x + attn_out
     h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
     x = x + swiglu_mlp(p["mlp"], h, policy)
@@ -163,10 +166,55 @@ def dense_block_decode(cfg: ArchConfig, p, x, position, cache_k, cache_v,
 
 
 def moe_block_decode(cfg: ArchConfig, p, x, position, cache_k, cache_v,
-                     cache_pos, write_idx, policy=None, kv_len=None):
+                     cache_pos, write_idx, policy=None, kv_len=None,
+                     active=None):
     h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
     attn_out, ck, cv, cp = attention_decode_layer(
         p["attn"], h, position, cache_k, cache_v, cache_pos, write_idx,
+        policy=policy, kv_len=kv_len, active=active, **_attn_kwargs(cfg))
+    x = x + attn_out
+    h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
+    x = x + moe_layer(p["moe"], h, cfg)
+    return x, ck, cv, cp
+
+
+def mamba_block_decode(cfg: ArchConfig, p, x, state, active=None):
+    h = rms_norm(p["norm"], x, cfg.norm_eps)
+    fn = (ssm_mod.mamba2_decode if cfg.ssm_variant == "mamba2"
+          else ssm_mod.mamba1_decode)
+    y, new_state = fn(p["mamba"], h, cfg, state)
+    if active is not None:
+        # idle serving slots keep their state: a decode step must never
+        # advance the recurrence of a row another phase (chunked prefill)
+        # owns.
+        new_state = jax.tree.map(
+            lambda n, o: jnp.where(
+                active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+            new_state, state)
+    return x + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Chunk-prefill block bodies (C tokens against the live slot cache)
+# ---------------------------------------------------------------------------
+def dense_block_chunk(cfg: ArchConfig, p, x, positions, cache_k, cache_v,
+                      cache_pos, write_idx, *, window=0, policy=None,
+                      kv_len=None):
+    h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
+    attn_out, ck, cv, cp = attention_chunk_layer(
+        p["attn"], h, positions, cache_k, cache_v, cache_pos, write_idx,
+        policy=policy, kv_len=kv_len, **_attn_kwargs(cfg, window))
+    x = x + attn_out
+    h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
+    x = x + swiglu_mlp(p["mlp"], h, policy)
+    return x, ck, cv, cp
+
+
+def moe_block_chunk(cfg: ArchConfig, p, x, positions, cache_k, cache_v,
+                    cache_pos, write_idx, policy=None, kv_len=None):
+    h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
+    attn_out, ck, cv, cp = attention_chunk_layer(
+        p["attn"], h, positions, cache_k, cache_v, cache_pos, write_idx,
         policy=policy, kv_len=kv_len, **_attn_kwargs(cfg))
     x = x + attn_out
     h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
@@ -174,12 +222,13 @@ def moe_block_decode(cfg: ArchConfig, p, x, position, cache_k, cache_v,
     return x, ck, cv, cp
 
 
-def mamba_block_decode(cfg: ArchConfig, p, x, state):
+def mamba_block_chunk(cfg: ArchConfig, p, x, state, mask, fill):
     h = rms_norm(p["norm"], x, cfg.norm_eps)
-    fn = (ssm_mod.mamba2_decode if cfg.ssm_variant == "mamba2"
-          else ssm_mod.mamba1_decode)
-    y, new_state = fn(p["mamba"], h, cfg, state)
-    return x + y, new_state
+    fn = (ssm_mod.mamba2_layer if cfg.ssm_variant == "mamba2"
+          else ssm_mod.mamba1_layer)
+    y, new_state = fn(p["mamba"], h, cfg, state, mask=mask, fill=fill)
+    x = x + y
+    return x, new_state
 
 
 # ---------------------------------------------------------------------------
@@ -277,13 +326,16 @@ def trunk_forward(cfg: ArchConfig, params, x, positions, *,
 def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
                  write_full, write_local,
                  policy: Optional[PrecisionPolicy] = None,
-                 kv_len: Optional[jax.Array] = None):
+                 kv_len: Optional[jax.Array] = None,
+                 active: Optional[jax.Array] = None):
     """One-token pass through all blocks, updating the cache pytree.
 
     ``kv_len`` (B,) is the per-row high-water mark of the full-attention
     caches (serving passes each slot's fill so the decode kernel skips
     the unused capacity tail); ring caches bound themselves from
-    ``position``.
+    ``position``.  ``active`` (B,) bool predicates every cache/state
+    write — inactive rows (idle slots, slots mid-chunked-prefill) come
+    through the step bit-identical.
     """
     pat = layer_pattern(cfg)
     new_cache = dict(cache)
@@ -296,7 +348,7 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
             fn = moe_block_decode if is_moe else dense_block_decode
             h, ck, cv, cp = fn(cfg, p, h, position, ck, cv,
                                cache["full_pos"], write_full, policy=policy,
-                               kv_len=kv_len)
+                               kv_len=kv_len, active=active)
             return h, (ck, cv)
         x, (ks, vs) = lax.scan(body, x, (params["blocks"],
                                          cache["k"], cache["v"]))
@@ -305,7 +357,8 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
     elif pat["kind"] == "uniform_ssm":
         def body(h, pc):
             p, st = pc
-            h, st = mamba_block_decode(cfg, p, h, ssm_mod.SSMState(*st))
+            h, st = mamba_block_decode(cfg, p, h, ssm_mod.SSMState(*st),
+                                       active=active)
             return h, tuple(st)
         x, states = lax.scan(body, x, (params["blocks"],
                                        tuple(cache["ssm"])))
@@ -318,7 +371,8 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
             p, ck, cv = pc
             h, ck, cv, cp = dense_block_decode(
                 cfg, p, h, position, ck, cv, cache["local_pos"],
-                write_local, window=w, policy=policy, kv_len=kv_len)
+                write_local, window=w, policy=policy, kv_len=kv_len,
+                active=active)
             return h, (ck, cv)
 
         def group_body(h, pc):
@@ -326,7 +380,8 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
             h, (lks, lvs) = lax.scan(local_body, h, (p["local"], lk, lv))
             h, gk, gv, _ = dense_block_decode(
                 cfg, p["global"], h, position, gk, gv,
-                cache["full_pos"], write_full, policy=policy, kv_len=kv_len)
+                cache["full_pos"], write_full, policy=policy, kv_len=kv_len,
+                active=active)
             return h, (lks, lvs, gk, gv)
 
         x, (lks, lvs, gks, gvs) = lax.scan(
@@ -348,7 +403,8 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
 
         def mamba_body(h, pc):
             p, st = pc
-            h, st = mamba_block_decode(cfg, p, h, ssm_mod.SSMState(*st))
+            h, st = mamba_block_decode(cfg, p, h, ssm_mod.SSMState(*st),
+                                       active=active)
             return h, tuple(st)
 
         def group_body(h, pc):
@@ -356,7 +412,8 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
             h, states = lax.scan(mamba_body, h, (p, tuple(st)))
             h, ck, cv, _ = dense_block_decode(
                 cfg, shared, h, position, ck, cv,
-                cache["full_pos"], write_full, policy=policy, kv_len=kv_len)
+                cache["full_pos"], write_full, policy=policy, kv_len=kv_len,
+                active=active)
             return h, (states, ck, cv)
 
         x, (states, ks, vs) = lax.scan(
@@ -437,41 +494,211 @@ def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
     """token: (B,) int32; position: (B,) absolute index of this token.
 
     ``write_idx`` (B,) is the cache slot row index to write KV into; it
-    defaults to ``position`` (contiguous cache), but the serving engine
-    passes it separately because a left-padded prefill bucket leaves the
-    cache index ≠ absolute position.  Attention validity is always
-    decided by stored positions, never by slot index.
+    defaults to ``position``, which is also what the serving engine uses
+    — pad-free chunked admission keeps every cache row contiguous in
+    positions, so index == position always.  (The override remains for
+    callers with exotic layouts.)  Attention validity is always decided
+    by stored positions, never by slot index.
 
     ``kv_len`` (B,) optionally bounds each row's live cache region by
     index: the caller promises every entry at index >= kv_len is invalid
-    (position −1), letting the decode kernel skip the capacity tail (and
-    skip idle serving slots entirely with kv_len == 0).  ``None`` scans
-    the whole cache — masking alone still guarantees correctness.
+    (position −1), letting the decode kernel skip the capacity tail.
+    ``kv_len == 0`` marks an idle serving slot: its row is skipped by the
+    kernel AND every cache/state write for it is suppressed — the step
+    cannot scribble into a row the scheduler has parked or is chunk-
+    prefilling.  ``None`` scans (and writes) the whole cache — masking
+    alone still guarantees correctness.
     """
     params = maybe_cast_params(params, cfg)
     x = embed_tokens(params, token[:, None], cfg)
     w = cfg.sliding_window
     write_full = position if write_idx is None else write_idx
     write_local = position % w if w else write_full
+    active = None if kv_len is None else kv_len > 0
     x, new_cache = trunk_decode(cfg, params, x, position, cache,
                                 write_full=write_full,
                                 write_local=write_local, policy=policy,
-                                kv_len=kv_len)
+                                kv_len=kv_len, active=active)
     logits = unembed(params, x, cfg)[:, 0]
     # position bookkeeping lives outside trunk_decode (shared across layers)
     if "full_pos" in new_cache:
         new_cache["full_pos"] = _write_pos(new_cache["full_pos"], position,
-                                           write_full)
+                                           write_full, active)
     if "local_pos" in new_cache:
         new_cache["local_pos"] = _write_pos(new_cache["local_pos"], position,
-                                            write_local)
+                                            write_local, active)
     return logits, new_cache
 
 
-def _write_pos(pos_arr, position, idx):
+def _write_pos(pos_arr, position, idx, active=None):
+    if active is None:
+        return jax.vmap(
+            lambda cp, pv, i: lax.dynamic_update_slice_in_dim(cp, pv[None],
+                                                              i, 0)
+        )(pos_arr, position, idx)
+
+    def one(cp, pv, i, a):
+        old = lax.dynamic_slice_in_dim(cp, i, 1, 0)
+        return lax.dynamic_update_slice_in_dim(
+            cp, jnp.where(a, pv[None], old), i, 0)
+    return jax.vmap(one)(pos_arr, position, idx, active)
+
+
+def _write_pos_chunk(pos_arr, positions, idx):
+    """Stamp a whole chunk's (B, C) positions at per-row offset ``idx``
+    — the multi-entry sibling of ``_write_pos`` (pad tail entries carry
+    −1 and are written invalid)."""
     return jax.vmap(
-        lambda cp, pv, i: lax.dynamic_update_slice_in_dim(cp, pv[None], i, 0)
-    )(pos_arr, position, idx)
+        lambda cp, pv, i: lax.dynamic_update_slice_in_dim(cp, pv, i, 0)
+    )(pos_arr, positions, idx)
+
+
+# ---------------------------------------------------------------------------
+# Chunked pad-free prefill (serving admission path)
+# ---------------------------------------------------------------------------
+def trunk_prefill_chunk(cfg: ArchConfig, params, x, positions, cache, *,
+                        write_full,
+                        policy: Optional[PrecisionPolicy] = None,
+                        kv_len: Optional[jax.Array] = None):
+    """C-token pass through all blocks against the live slot cache.
+
+    The chunk sibling of ``trunk_decode``: attention layers write the
+    chunk's KV unpadded into rows ``[write_full, write_full + C)`` (ring
+    layers scatter at ``pos % window``) and attend the slot's live
+    prefix plus the chunk; SSM layers advance the carried recurrent
+    state over exactly the chunk's real tokens (pad steps of a ragged
+    final chunk are exact no-ops).
+    """
+    pat = layer_pattern(cfg)
+    new_cache = dict(cache)
+    mask = positions >= 0
+    fill = mask.sum(axis=1).astype(jnp.int32)
+
+    if pat["kind"] in ("uniform_dense", "uniform_moe"):
+        is_moe = pat["kind"] == "uniform_moe"
+
+        def body(h, pc):
+            p, ck, cv = pc
+            fn = moe_block_chunk if is_moe else dense_block_chunk
+            h, ck, cv, cp = fn(cfg, p, h, positions, ck, cv,
+                               cache["full_pos"], write_full, policy=policy,
+                               kv_len=kv_len)
+            return h, (ck, cv)
+        x, (ks, vs) = lax.scan(body, x, (params["blocks"],
+                                         cache["k"], cache["v"]))
+        new_cache["k"], new_cache["v"] = ks, vs
+
+    elif pat["kind"] == "uniform_ssm":
+        def body(h, pc):
+            p, st = pc
+            h, st = mamba_block_chunk(cfg, p, h, ssm_mod.SSMState(*st),
+                                      mask, fill)
+            return h, tuple(st)
+        x, states = lax.scan(body, x, (params["blocks"],
+                                       tuple(cache["ssm"])))
+        new_cache["ssm"] = ssm_mod.SSMState(*states)
+
+    elif pat["kind"] == "local_global":
+        w = cfg.sliding_window
+
+        def local_body(h, pc):
+            p, ck, cv = pc
+            h, ck, cv, cp = dense_block_chunk(
+                cfg, p, h, positions, ck, cv, cache["local_pos"],
+                write_full, window=w, policy=policy, kv_len=kv_len)
+            return h, (ck, cv)
+
+        def group_body(h, pc):
+            p, lk, lv, gk, gv = pc
+            h, (lks, lvs) = lax.scan(local_body, h, (p["local"], lk, lv))
+            h, gk, gv, _ = dense_block_chunk(
+                cfg, p["global"], h, positions, gk, gv,
+                cache["full_pos"], write_full, policy=policy, kv_len=kv_len)
+            return h, (lks, lvs, gk, gv)
+
+        x, (lks, lvs, gks, gvs) = lax.scan(
+            group_body, x,
+            ({"local": params["groups"]["local"],
+              "global": params["groups"]["global"]},
+             cache["local_k"], cache["local_v"],
+             cache["global_k"], cache["global_v"]))
+        new_cache.update(local_k=lks, local_v=lvs,
+                         global_k=gks, global_v=gvs)
+        if "tail_k" in cache:
+            x, (tks, tvs) = lax.scan(
+                local_body, x,
+                (params["tail_local"], cache["tail_k"], cache["tail_v"]))
+            new_cache.update(tail_k=tks, tail_v=tvs)
+
+    elif pat["kind"] == "hybrid":
+        shared = params["shared_attn"]
+
+        def mamba_body(h, pc):
+            p, st = pc
+            h, st = mamba_block_chunk(cfg, p, h, ssm_mod.SSMState(*st),
+                                      mask, fill)
+            return h, tuple(st)
+
+        def group_body(h, pc):
+            p, st, ck, cv = pc
+            h, states = lax.scan(mamba_body, h, (p, tuple(st)))
+            h, ck, cv, _ = dense_block_chunk(
+                cfg, shared, h, positions, ck, cv,
+                cache["full_pos"], write_full, policy=policy, kv_len=kv_len)
+            return h, (states, ck, cv)
+
+        x, (states, ks, vs) = lax.scan(
+            group_body, x,
+            (params["groups"], tuple(cache["ssm"]),
+             cache["attn_k"], cache["attn_v"]))
+        new_cache["ssm"] = ssm_mod.SSMState(*states)
+        new_cache["attn_k"], new_cache["attn_v"] = ks, vs
+    else:
+        raise ValueError(pat)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, new_cache
+
+
+def forward_prefill_chunk(cfg: ArchConfig, params, cache,
+                          tokens: jax.Array, positions: jax.Array,
+                          policy: Optional[PrecisionPolicy] = None,
+                          kv_len: Optional[jax.Array] = None):
+    """One fixed-size prefill chunk against a live slot cache.
+
+    tokens: (B, C) int32; positions: (B, C) absolute positions — the
+    chunk covers ``[p, p + C)`` of its prompt with ``p = positions[:, 0]``
+    (the first entry is always a real token); a ragged final chunk pads
+    the tail with position −1 (pad rows are written invalid and their
+    logits are garbage the caller must ignore).
+
+    ``kv_len`` (B,) is the post-write fill ``p + C`` bounding the
+    attention sweep (``None`` scans the whole capacity; stored positions
+    still decide validity).  Returns (logits (B, C, vocab), new_cache):
+    the caller reads the next token from the last *real* row's logits.
+
+    Calling this ceil(S / C) times over a prompt of length S reproduces
+    ``forward_prefill``'s cache and final-token logits without a single
+    pad row entering the KV cache or the SSM recurrence — the admission
+    path of the chunked continuous-batching engine.
+    """
+    params = maybe_cast_params(params, cfg)
+    x = embed_tokens(params, tokens, cfg)
+    w = cfg.sliding_window
+    write_full = positions[:, 0]
+    x, new_cache = trunk_prefill_chunk(cfg, params, x, positions, cache,
+                                       write_full=write_full, policy=policy,
+                                       kv_len=kv_len)
+    logits = unembed(params, x, cfg)
+    # position bookkeeping outside the trunk (shared across layers)
+    if "full_pos" in new_cache:
+        new_cache["full_pos"] = _write_pos_chunk(new_cache["full_pos"],
+                                                 positions, write_full)
+    if "local_pos" in new_cache:
+        idx = ring_scatter_idx(positions, w)
+        new_cache["local_pos"] = _ring_scatter(new_cache["local_pos"],
+                                               positions, idx)
+    return logits, new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -480,12 +707,12 @@ def _write_pos(pos_arr, position, idx):
 def _ring_select(pos1d: jax.Array, w: int):
     """Per-row ring placement for sliding-window caches.
 
-    pos1d: (B, S) absolute positions, −1 marking invalid (left-pad)
-    entries.  The ring keeps, per row, the w most-recent *real* entries
-    at slot ``pos % w``.  Returns (src, has, local_pos): source index
-    into S per ring slot, slot validity, and the stored position per
-    slot (−1 when empty) — per-row, so left-padded serving buckets with
-    different pad widths per sequence stay correct.
+    pos1d: (B, S) absolute positions, −1 marking invalid (pad) entries.
+    The ring keeps, per row, the w most-recent *real* entries at slot
+    ``pos % w``.  Returns (src, has, local_pos): source index into S
+    per ring slot, slot validity, and the stored position per slot
+    (−1 when empty) — per-row, so padded batches with different pad
+    widths per sequence stay correct.
     """
     max_pos = jnp.max(pos1d, axis=1, keepdims=True)            # (B, 1)
     keep = (pos1d >= 0) & (pos1d > max_pos - w)                # (B, S)

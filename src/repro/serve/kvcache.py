@@ -9,15 +9,19 @@ serving-side pieces:
 * ``alloc_decode_cache``    — zero-filled slot-addressed decode cache of
                               ``slots`` rows × ``capacity`` KV entries,
                               position arrays initialised to -1 (invalid).
-* ``write_slot``            — splice one batch-1 prefill cache into a slot
-                              row (the admission path).
+* ``slot_batch_axes`` / ``take_slot`` / ``put_slot`` — the slot-view API
+  chunked pad-free prefill is built on: slice one slot's row out of the
+  big cache (a batch-1 sub-cache), run a prefill chunk against it, and
+  splice it back.  Admission resets a slot by ``put_slot``-ing an empty
+  batch-1 cache in (positions −1, SSM state zeroed).
 * ``release_slot``          — invalidate a slot row's positions so stale
                               KV can never be attended (the free path).
 * ``abstract_decode_cache`` — ShapeDtypeStructs of the above, for AOT
                               export (eon_compiler.compile_serve_decode).
 
-Validity is decided *only* by stored positions (−1 = empty), so a slot
-row can be recycled between decode steps without touching the K/V bytes.
+Validity is decided by stored positions (−1 = empty) plus the
+scheduler's per-slot ``kv_len`` bound, so a slot row can be recycled
+between decode steps without touching the K/V bytes.
 
 Every entry point is precision-aware (``PrecisionPolicy``): an int8
 policy makes the KV leaves ``Int8KV`` pairs — int8 values plus one f32
@@ -34,7 +38,7 @@ import numpy as np
 from jax import lax
 
 from repro.core.arch import ArchConfig, ShapeConfig
-from repro.core.quantize import Int8KV, PrecisionPolicy
+from repro.core.quantize import PrecisionPolicy
 from repro.models.transformer import grow_cache  # noqa: F401  (re-export)
 
 
@@ -83,10 +87,6 @@ def kv_cache_bytes(cfg: ArchConfig, batch: int, seq_len: int,
 # ---------------------------------------------------------------------------
 # Slot-addressed decode cache (continuous batching)
 # ---------------------------------------------------------------------------
-def _is_kv_key(key: str) -> bool:
-    return key.split("_")[-1] in ("k", "v")
-
-
 def abstract_decode_cache(cfg: ArchConfig, slots: int, capacity: int,
                           policy: Optional[PrecisionPolicy] = None):
     """ShapeDtypeStructs of a ``slots`` × ``capacity`` decode cache.
@@ -127,47 +127,46 @@ def _first_diff_axis(big_shape, small_shape) -> int:
     return -1  # identical shapes: slots == 1, write in place
 
 
-def _splice(big: jax.Array, small: jax.Array, slot, batch_axis: int):
-    starts = [0] * big.ndim
-    if batch_axis >= 0:
-        starts[batch_axis] = slot
-    return lax.dynamic_update_slice(big, small.astype(big.dtype),
-                                    tuple(starts))
+def slot_batch_axes(cfg: ArchConfig, slots: int, capacity: int,
+                    policy: Optional[PrecisionPolicy] = None):
+    """Per-leaf batch-axis pytree of the decode cache, inferred by
+    diffing the ``slots``-row abstract cache against its batch-1 twin —
+    robust to every layout (stacked-layer KV, Int8KV value/scale pairs,
+    nested SSM state).  Computed once per server; closed over (static)
+    by the jitted slot-view steps.  −1 marks a leaf with no batch axis
+    (only possible when ``slots == 1``: slice/splice in place)."""
+    big = abstract_decode_cache(cfg, slots, capacity, policy)
+    small = abstract_decode_cache(cfg, 1, capacity, policy)
+    return jax.tree.map(lambda b, s: _first_diff_axis(b.shape, s.shape),
+                        big, small)
 
 
-def write_slot(big_cache: Dict[str, Any], small_cache: Dict[str, Any],
-               slot) -> Dict[str, Any]:
-    """Splice a batch-1 prefill cache into row ``slot`` of the big cache.
+def take_slot(big_cache, axes, slot):
+    """Slice slot ``slot``'s row out of the big cache as a batch-1
+    sub-cache (``axes`` from ``slot_batch_axes``, closed over — the axis
+    choice must be static under jit; ``slot`` may be traced)."""
+    def take(big, axis):
+        if axis < 0:
+            return big
+        starts = [0] * big.ndim
+        starts[axis] = slot
+        sizes = list(big.shape)
+        sizes[axis] = 1
+        return lax.dynamic_slice(big, tuple(starts), tuple(sizes))
+    return jax.tree.map(take, big_cache, axes)
 
-    K/V rows are written over indices ``[0, bucket)``; the position row is
-    fully rewritten (−1 beyond the bucket) so whatever the slot held
-    before — a finished request's KV, garbage writes from its idle steps —
-    is invalidated in one shot.  Int8KV rows splice as a pair: values at
-    their (stacked) batch axis, the per-entry scales one axis short.
-    Jit this per prefill bucket shape.
-    """
-    out = dict(big_cache)
-    for key, big in big_cache.items():
-        small = small_cache[key]
-        if key.endswith("_pos"):
-            row = jnp.full((1, big.shape[1]), -1, big.dtype)
-            wiped = lax.dynamic_update_slice(big, row, (slot, 0))
-            out[key] = lax.dynamic_update_slice(
-                wiped, small.astype(big.dtype), (slot, 0))
-        elif _is_kv_key(key):
-            if isinstance(big, Int8KV):
-                out[key] = Int8KV(
-                    _splice(big.q, small.q, slot, big.q.ndim - 4),
-                    _splice(big.scale, small.scale, slot,
-                            big.scale.ndim - 3))
-            else:
-                out[key] = _splice(big, small, slot, big.ndim - 4)
-        else:  # recurrent-state pytrees (ssm): batch axis inferred per leaf
-            out[key] = jax.tree.map(
-                lambda b, s: _splice(
-                    b, s, slot, _first_diff_axis(b.shape, s.shape)),
-                big, small)
-    return out
+
+def put_slot(big_cache, small_cache, axes, slot):
+    """Splice a batch-1 sub-cache back into row ``slot`` — the inverse
+    of ``take_slot``.  Splicing a fresh ``alloc_decode_cache(cfg, 1, …)``
+    resets the slot (positions −1, SSM state zeroed) for admission."""
+    def put(big, small, axis):
+        starts = [0] * big.ndim
+        if axis >= 0:
+            starts[axis] = slot
+        return lax.dynamic_update_slice(big, small.astype(big.dtype),
+                                        tuple(starts))
+    return jax.tree.map(put, big_cache, small_cache, axes)
 
 
 def release_slot(big_cache: Dict[str, Any], slot) -> Dict[str, Any]:

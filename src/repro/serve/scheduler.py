@@ -4,72 +4,94 @@ The serving analogue of the EIM process runner's queue: requests wait in
 an FCFS queue; a fixed set of KV-cache *slots* (rows of the decode
 cache) is the unit of admission.  A slot's lifecycle is
 
-    FREE ──admit──▶ ACTIVE ──finish──▶ FREE
-          (prefill + write_slot)   (release_slot between decode steps)
+    FREE ──admit──▶ PREFILLING ──last chunk──▶ ACTIVE ──finish──▶ FREE
+         (reset_slot)   (chunk steps,        (decode steps)  (release_slot)
+                         budgeted per
+                         decode step)
 
-Slots are freed *between decode steps*, not at batch boundaries, so a
-short request never waits for the longest member of its batch — that is
-the whole difference between continuous and static batching.
+Admission is cheap (host bookkeeping plus one device-side slot-row
+reset — no prefill compute): the prompt is then consumed in fixed-size
+chunks *interleaved with decode steps* under a per-step token budget,
+each chunk written unpadded into the slot's cache rows — no pad row
+ever occupies KV capacity, and a long prompt can never
+head-of-line-block the active slots' next tokens.  Slots are freed
+*between decode steps*, not at batch boundaries, so a short request
+never waits for the longest member of its batch — that is the whole
+difference between continuous and static batching.
 
-``BucketPolicy`` quantises prompt lengths to a small set of padded
-prefill shapes so each bucket compiles exactly once.
+See docs/scheduling.md for the full lifecycle/budget contract.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Deque, List, Optional, Tuple
 
-
-class BucketPolicy:
-    """Smallest-fitting padded prefill bucket; prompts longer than the
-    largest bucket are truncated (keep the most recent tokens)."""
-
-    def __init__(self, buckets: Sequence[int]):
-        assert buckets, "need at least one prefill bucket"
-        self.buckets: Tuple[int, ...] = tuple(sorted(set(int(b)
-                                                         for b in buckets)))
-
-    @property
-    def max_bucket(self) -> int:
-        return self.buckets[-1]
-
-    def bucket_for(self, prompt_len: int) -> int:
-        for b in self.buckets:
-            if prompt_len <= b:
-                return b
-        return self.max_bucket
+import numpy as np
 
 
 @dataclasses.dataclass
 class Slot:
-    """Host-side view of one decode-cache row."""
+    """Host-side view of one decode-cache row.
+
+    Invariants (the ``kv_len`` contract the decode kernel relies on):
+    cache rows ``[0, fill)`` hold this request's live KV, rows at index
+    ``>= fill`` are invalid (position −1, or garbage behind the kv_len
+    bound); with pad-free admission the cache index of every entry
+    equals its absolute position, so ``write_idx == position`` and the
+    post-write fill is ``position + 1``.
+    """
     index: int
     rid: Optional[int] = None      # request occupying the slot (None = free)
+    prompt: Optional[np.ndarray] = None   # host copy while PREFILLING
+    chunk_pos: int = 0             # prompt tokens already prefilled
     position: int = 0              # absolute position of the next token
-    write_idx: int = 0             # next free cache row index (≥ bucket)
     generated: int = 0             # tokens emitted for this request
     max_new: int = 0
+
+    @property
+    def write_idx(self) -> int:
+        """Cache row of the next decode write — identically ``position``
+        under pad-free admission (derived, so the two can never drift)."""
+        return self.position
 
     @property
     def free(self) -> bool:
         return self.rid is None
 
-    def occupy(self, rid: int, prompt_len: int, bucket: int,
-               max_new: int) -> None:
+    @property
+    def prefilling(self) -> bool:
+        return self.rid is not None and self.prompt is not None
+
+    @property
+    def active(self) -> bool:
+        return self.rid is not None and self.prompt is None
+
+    def occupy(self, rid: int, prompt: np.ndarray, max_new: int) -> None:
+        """FREE → PREFILLING: park the prompt; no device work yet."""
         self.rid = rid
-        self.position = prompt_len   # prefill emitted the token at len-1
-        self.write_idx = bucket
-        self.generated = 1           # prefill's greedy token counts
+        self.prompt = np.asarray(prompt, np.int32)
+        self.chunk_pos = 0
+        self.generated = 0
         self.max_new = max_new
+
+    def begin_decode(self) -> None:
+        """PREFILLING → ACTIVE: the final chunk emitted the first token
+        (position ``len(prompt) − 1``), so decoding starts at
+        ``position == write_idx == len(prompt)``."""
+        plen = len(self.prompt)
+        self.prompt = None
+        self.position = plen
+        self.generated = 1           # the prefill's greedy token counts
 
     def advance(self) -> None:
         self.position += 1
-        self.write_idx += 1
         self.generated += 1
 
     def release(self) -> None:
         self.rid = None
+        self.prompt = None
+        self.chunk_pos = 0
         self.generated = 0
         self.max_new = 0
 
@@ -87,8 +109,11 @@ class SlotScheduler:
     def free_slots(self) -> List[Slot]:
         return [s for s in self.slots if s.free]
 
+    def prefilling_slots(self) -> List[Slot]:
+        return [s for s in self.slots if s.prefilling]
+
     def active_slots(self) -> List[Slot]:
-        return [s for s in self.slots if not s.free]
+        return [s for s in self.slots if s.active]
 
     def admissions(self) -> List[Tuple[Slot, object]]:
         """Pair waiting requests with free slots (drains either side)."""

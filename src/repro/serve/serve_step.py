@@ -1,4 +1,5 @@
-"""serve_step factories: prefill and one-token decode, policy-wrapped.
+"""serve_step factories: prefill, chunked prefill, and one-token decode,
+policy-wrapped.
 
 Each factory takes an optional ``PrecisionPolicy`` (core/quantize):
 the step closes over it, so float and int8 servers lower distinct
@@ -6,12 +7,16 @@ the step closes over it, so float and int8 servers lower distinct
 
 ``decode_*`` shapes lower ``decode_step`` (one new token against a KV
 cache of seq_len), ``prefill_*`` shapes lower ``prefill_step`` — per the
-assignment's cell semantics.
+assignment's cell semantics.  ``chunk_prefill_step`` is the admission
+path of chunked pad-free prefill: one fixed-size chunk of C prompt
+tokens against one slot's live cache row, compiled once per chunk shape
+(instead of once per padded bucket).
 
-The decode step takes an explicit per-sequence ``write_idx`` so the
-continuous-batching engine can keep cache rows slot-addressed (index ≠
-absolute position once prompts are left-padded into buckets); plain
-callers pass ``write_idx == position``.
+With pad-free admission a cache row's index always equals its entry's
+absolute position, so the slot decode step derives its write index from
+``position`` and carries only the per-slot ``kv_len`` fill — the
+scheduler's exact live length, no pad region (see docs/scheduling.md
+for the invariants).
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core.arch import ArchConfig
 from repro.models.api import model_fns
+from repro.serve.kvcache import put_slot, take_slot
 from repro.sharding.policy import AxisRules, use_rules
 
 
@@ -50,6 +56,48 @@ def make_prefill_step(cfg: ArchConfig, *, rules: Optional[AxisRules] = None,
     return _context(prefill_step, rules, mesh)
 
 
+def make_chunk_prefill_step(cfg: ArchConfig, *, axes=None,
+                            rules: Optional[AxisRules] = None, mesh=None,
+                            policy=None):
+    """Chunked pad-free prefill step (the serving admission path).
+
+    Without ``axes``: ``step(params, cache, tokens, positions, kv_len)``
+    runs one (B, C) chunk against a batch-matched cache — the model-
+    level building block.
+
+    With ``axes`` (a ``kvcache.slot_batch_axes`` pytree): the step takes
+    the *big* slots × capacity cache plus a traced ``slot`` index,
+    slices that slot's row out, runs the chunk at batch 1, and splices
+    the row back — so a prefill chunk costs one slot's attention, not
+    the whole batch's: ``step(params, cache, tokens, positions, slot,
+    kv_len) -> (next_tokens (1, C), logits, new_cache)``.
+
+    ``tokens``/``positions``: (B, C) with the pad tail of a ragged final
+    chunk at position −1; ``kv_len``: (B,) post-write fill ``p + C``.
+    The chunk's write offset is ``positions[:, 0]`` (the first entry of
+    a chunk is always a real token).
+    """
+    fns = model_fns(cfg)
+
+    def chunk_step(params, cache, tokens, positions, kv_len):
+        logits, new_cache = fns.forward_prefill_chunk(
+            cfg, params, cache, tokens, positions, policy=policy,
+            kv_len=kv_len)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, logits, new_cache
+
+    if axes is None:
+        return _context(chunk_step, rules, mesh)
+
+    def slot_chunk_step(params, cache, tokens, positions, slot, kv_len):
+        small = take_slot(cache, axes, slot)
+        next_tokens, logits, new_small = chunk_step(params, small, tokens,
+                                                    positions, kv_len)
+        return next_tokens, logits, put_slot(cache, new_small, axes, slot)
+
+    return _context(slot_chunk_step, rules, mesh)
+
+
 def make_decode_step(cfg: ArchConfig, *, rules: Optional[AxisRules] = None,
                      mesh=None, policy=None):
     fns = model_fns(cfg)
@@ -66,26 +114,29 @@ def make_decode_step(cfg: ArchConfig, *, rules: Optional[AxisRules] = None,
 def make_slot_decode_step(cfg: ArchConfig, *,
                           rules: Optional[AxisRules] = None, mesh=None,
                           policy=None):
-    """Decode step with slot-addressed cache writes (continuous batching).
+    """Decode step over the slot-addressed cache (continuous batching).
 
     ``policy`` (``PrecisionPolicy``) selects the weight/activation/KV
     precision the step lowers with — it is part of the compiled
     artifact's identity, not a runtime argument.
 
-    ``kv_len`` (B,) is the scheduler's per-slot fill (high-water mark +
-    1 for the entry this step writes; 0 for idle slots): the decode
-    attention kernel reads only ``kv_len`` cache rows per slot instead
-    of the full capacity rectangle.  The caller owns the contract that
-    entries at index >= kv_len are invalid (position −1) — which the
-    slot API guarantees (write_slot wipes the row, decode writes advance
-    the mark by one).
+    ``kv_len`` (B,) is the scheduler's exact per-slot fill: with pad-free
+    chunked admission a cache row's index equals its entry's absolute
+    position, so the write index is simply ``position`` and the
+    post-write fill is ``position + 1``.  ``kv_len == 0`` marks a slot
+    that is idle or mid-prefill: the decode attention skips its row
+    outright AND every cache/state write for it is suppressed, so decode
+    steps can interleave with chunked prefill on the same cache.  The
+    caller owns the contract that entries at index >= kv_len are invalid
+    — which pad-free admission guarantees (chunks write ``[p, p + C)``
+    exactly; decode writes advance the fill by one).
     """
     fns = model_fns(cfg)
 
-    def decode_step(params, cache, token, position, write_idx, kv_len):
+    def decode_step(params, cache, token, position, kv_len):
         logits, new_cache = fns.forward_decode(cfg, params, cache, token,
-                                               position, write_idx,
-                                               policy=policy, kv_len=kv_len)
+                                               position, policy=policy,
+                                               kv_len=kv_len)
         next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_token, logits, new_cache
 

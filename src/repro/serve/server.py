@@ -4,13 +4,18 @@ a deployed artifact behind a queue-driven I/O interface.
 Two schedulers over the same model serve steps:
 
 * ``ContinuousBatchServer`` (the default ``BatchServer``) — slot-based
-  continuous batching.  Finished sequences release their KV-cache slot
-  *between decode steps* and waiting requests are admitted into freed
-  slots; per-request ``max_new_tokens`` is honored in-step.  Prefill is
-  compiled once per padded bucket; optionally the decode hot loop runs a
+  continuous batching with **chunked pad-free prefill**: a prompt of
+  length S is consumed in ceil(S / C) fixed-size chunk steps interleaved
+  with decode under a per-step token budget, each chunk written unpadded
+  into the slot's cache rows ``[p, p + C)``.  Finished sequences release
+  their KV-cache slot *between decode steps* and waiting requests are
+  admitted into freed slots; per-request ``max_new_tokens`` is honored
+  in-step.  One chunk shape compiles once (instead of one shape per
+  padded bucket); optionally the decode hot loop runs a
   ``CompiledArtifact`` (``core/eon_compiler.compile_serve_decode``) so
   serving executes the same AOT executable we "deploy" (paper C4).
-* ``StaticBatchServer`` — the classic baseline: a batch is formed once
+* ``StaticBatchServer`` — the classic baseline: a batch is formed once,
+  prefilled to completion (same pad-free chunk steps, no interleaving),
   and decodes until its slowest member finishes; short requests block
   behind long ones.  Kept as the benchmark control.
 
@@ -20,17 +25,20 @@ construction, serves through the quant-aware matmul entry point, and
 keeps the decode cache as Int8KV — ≥2× KV HBM, token-exact against the
 fake-quant float reference (docs/quantization.md).
 
-Both feed the decode step a per-slot ``kv_len`` (the scheduler's fill
-high-water mark; 0 for idle slots) so the flash-decode kernel reads
-only each slot's live prefix of the capacity rectangle — and int8
-decode dequantizes inside the kernel tile, never materializing a float
-cache (docs/serving.md, "Flash-decode kernel").
+Both feed the decode step a per-slot ``kv_len`` — with pad-free
+admission this is the *exact* live fill (``position + 1``; 0 for idle or
+mid-prefill slots, whose rows the step neither reads nor writes) — so
+the flash-decode kernel reads only each slot's live prefix of the
+capacity rectangle, and int8 decode dequantizes inside the kernel tile,
+never materializing a float cache (docs/serving.md, "Flash-decode
+kernel").
 
-Both left-pad prompts into the prefill bucket with position −1 marking
-pad entries, which the attention masks treat as never-attendable, so
-batched serving is token-exact versus an unpadded single-request decode
-for attention architectures.  (SSM/hybrid recurrences still traverse pad
-inputs — see docs/serving.md for the caveat.)
+No pad row ever enters the KV cache or an SSM recurrence, so batched
+serving is token-exact versus an unpadded single-request decode for
+every supported architecture family — attention, sliding-window ring,
+and SSM/hybrid alike (docs/scheduling.md).  Prompts that cannot fit a
+slot's capacity are rejected at ``submit`` with an explicit error;
+nothing is silently truncated.
 """
 from __future__ import annotations
 
@@ -45,9 +53,10 @@ import numpy as np
 from repro.core.arch import ArchConfig
 from repro.core.quantize import policy_for, quantize_model_params
 from repro.serve.kvcache import (alloc_decode_cache, decode_cache_nbytes,
-                                 grow_cache, release_slot, write_slot)
-from repro.serve.scheduler import BucketPolicy, SlotScheduler
-from repro.serve.serve_step import make_prefill_step, make_slot_decode_step
+                                 put_slot, release_slot, slot_batch_axes)
+from repro.serve.scheduler import SlotScheduler
+from repro.serve.serve_step import (make_chunk_prefill_step,
+                                    make_slot_decode_step)
 
 # Decode-cache capacity granularity: one flash-decode KV block (a
 # sub-multiple of kernels/flash_decode.py's block_k, so any rounded
@@ -77,16 +86,11 @@ def _check_supported(cfg: ArchConfig) -> None:
             " modality runner in front)")
 
 
-def _left_pad(prompt: np.ndarray, bucket: int):
-    """Pad/truncate into the bucket.  Returns (tokens, positions); pad
-    entries get position −1, which every attention mask rejects."""
-    p = np.asarray(prompt, np.int32)[-bucket:]
-    tokens = np.zeros((bucket,), np.int32)
-    positions = np.full((bucket,), -1, np.int32)
-    if len(p):
-        tokens[-len(p):] = p
-        positions[-len(p):] = np.arange(len(p), dtype=np.int32)
-    return tokens, positions, len(p)
+def _chunk_rows(prompt_len: int, chunk: int) -> int:
+    """Cache rows a chunked prefill touches: whole chunks, so the ragged
+    final chunk's pad tail (written invalid, overwritten by decode)
+    still needs rows up to the chunk boundary."""
+    return -(-prompt_len // chunk) * chunk
 
 
 def _summarize(served: List[Request], wall: float, *, engine: str,
@@ -105,7 +109,7 @@ def _summarize(served: List[Request], wall: float, *, engine: str,
         "tokens_generated": gen,
         "tokens_per_s": gen / max(wall, 1e-9),
         "decode_steps": decode_steps,
-        "prefills": prefills,
+        "prefill_chunks": prefills,
     }
     if occupancy and n_slots:
         m["mean_active_slots"] = float(np.mean(occupancy))
@@ -126,6 +130,51 @@ class _ServerBase:
         self.requests: Dict[int, Request] = {}
         self.metrics: Dict[str, float] = {}
 
+    def _slot_capacity(self) -> int:
+        """Per-slot KV rows: prompt + generation budget, with headroom
+        for a ragged final chunk's pad tail at max_prompt, rounded up to
+        the flash-decode KV block so the kernel never pads the cache per
+        step; the tail is dead capacity the per-slot kv_len bound skips
+        without reading.  Both engines and ``_check_fits`` share this."""
+        need = max(self.max_prompt + self.max_new_cap,
+                   _chunk_rows(self.max_prompt, self.chunk))
+        return -(-need // KV_BLOCK) * KV_BLOCK
+
+    def _init_slot_steps(self, n_slots: int) -> None:
+        """Chunk-prefill / decode / reset steps over an ``n_slots`` ×
+        ``self.capacity`` cache (shared by both engines)."""
+        axes = slot_batch_axes(self.cfg, n_slots, self.capacity, self.prec)
+        # the cache is dead after every call (immediately reassigned):
+        # donate it so steps update rows in place instead of copying the
+        # whole KV allocation per token
+        self._chunk_step = jax.jit(
+            make_chunk_prefill_step(self.cfg, axes=axes, policy=self.prec),
+            donate_argnums=(1,))
+        self._reset = jax.jit(
+            lambda cache, empty, slot: put_slot(cache, empty, axes, slot),
+            donate_argnums=(0,))
+        self._release = jax.jit(release_slot, donate_argnums=(0,))
+        self._empty_row = alloc_decode_cache(self.cfg, 1, self.capacity,
+                                             self.prec)
+        self.cache = alloc_decode_cache(self.cfg, n_slots, self.capacity,
+                                        self.prec)
+        # host mirror of the last emitted token per slot (decode feed)
+        self._cur = np.zeros((n_slots,), np.int32)
+
+    def _check_fits(self, prompt: np.ndarray, max_new: int) -> None:
+        """Explicit capacity check at submit — any prompt that fits is
+        served exactly; anything else errors instead of being silently
+        truncated (the old bucket policy's failure mode)."""
+        s = len(prompt)
+        if s < 1:
+            raise ValueError("empty prompt")
+        need = max(s + max_new, _chunk_rows(s, self.chunk))
+        if need > self.capacity:
+            raise ValueError(
+                f"prompt of {s} tokens + {max_new} new needs {need} cache"
+                f" rows > slot capacity {self.capacity}; raise max_prompt/"
+                f"max_new_cap (or shorten the prompt)")
+
     def _make_requests(self, prompts: List[np.ndarray],
                        max_new_tokens) -> List[Request]:
         if max_new_tokens is None:
@@ -133,31 +182,79 @@ class _ServerBase:
         if isinstance(max_new_tokens, int):
             max_new_tokens = [max_new_tokens] * len(prompts)
         assert len(max_new_tokens) == len(prompts)
+        # validate the whole batch before registering anything, so a
+        # rejected prompt leaves no orphaned half-submitted requests
+        checked = []
+        for p, mn in zip(prompts, max_new_tokens):
+            p = np.asarray(p, np.int32)
+            mn = max(1, min(int(mn), self.max_new_cap))
+            self._check_fits(p, mn)
+            checked.append((p, mn))
         now = time.perf_counter()
         reqs = []
-        for p, mn in zip(prompts, max_new_tokens):
-            r = Request(rid=self._next_rid, prompt=np.asarray(p, np.int32),
-                        max_new_tokens=max(1, min(int(mn), self.max_new_cap)),
+        for p, mn in checked:
+            r = Request(rid=self._next_rid, prompt=p, max_new_tokens=mn,
                         submitted_at=now)
             self._next_rid += 1
             self.requests[r.rid] = r
             reqs.append(r)
         return reqs
 
+    def _run_chunk(self, slot, step_clock: int) -> None:
+        """One prefill chunk for ``slot``; flips it ACTIVE (and emits the
+        first token) when the prompt is exhausted."""
+        c = self.chunk
+        prompt = slot.prompt
+        p = slot.chunk_pos
+        r = min(c, len(prompt) - p)
+        toks = np.zeros((1, c), np.int32)
+        poss = np.full((1, c), -1, np.int32)
+        toks[0, :r] = prompt[p:p + r]
+        poss[0, :r] = np.arange(p, p + r, dtype=np.int32)
+        kvl = jnp.asarray([p + c], jnp.int32)
+        ntok, _, self.cache = self._chunk_step(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(poss),
+            slot.index, kvl)
+        slot.chunk_pos += r
+        if slot.chunk_pos < len(prompt):
+            return
+        # final chunk: its last real row's logits are the first token
+        req = self.requests[slot.rid]
+        tok0 = int(np.asarray(ntok)[0, r - 1])
+        req.tokens.append(tok0)
+        req.first_token_at = time.perf_counter()
+        slot.begin_decode()
+        if req.max_new_tokens <= 1 or tok0 == self.eos_id:
+            self._finish(req, step_clock)
+            self.cache = self._release(self.cache, slot.index)
+            slot.release()
+        else:
+            self._cur[slot.index] = tok0
+
+    def _finish(self, req: Request, step_clock: int) -> None:
+        req.done = True
+        req.finished_at = time.perf_counter()
+        req.finished_step = step_clock
+        self._served.append(req)
+
 
 class ContinuousBatchServer(_ServerBase):
-    """Continuous batching: slot recycling between decode steps.
+    """Continuous batching: slot recycling between decode steps, with
+    prefill chunks scheduled *inside* the decode loop.
 
-    ``slots`` decode rows share one jitted decode step; prompts prefill
-    one at a time into the smallest padded bucket (one compilation per
-    bucket) and are spliced into a free slot row.  ``batch_size`` /
-    ``prompt_len`` are accepted as aliases so existing callers keep
-    working.
+    ``slots`` decode rows share one jitted decode step; prompts are
+    consumed ``prefill_chunk`` tokens at a time (one compiled chunk
+    shape, pad-free cache rows) under ``prefill_token_budget`` prefill
+    tokens per decode step, so a long prompt cannot head-of-line-block
+    the active slots' next tokens.  ``batch_size`` / ``prompt_len`` are
+    accepted as aliases so existing callers keep working.
     """
 
     def __init__(self, cfg: ArchConfig, params, *,
                  slots: Optional[int] = None,
-                 buckets: Optional[Sequence[int]] = None,
+                 max_prompt: Optional[int] = None,
+                 prefill_chunk: int = 8,
+                 prefill_token_budget: Optional[int] = None,
                  max_new_tokens: int = 16,
                  max_new_cap: Optional[int] = None,
                  eos_id: Optional[int] = None,
@@ -167,14 +264,15 @@ class ContinuousBatchServer(_ServerBase):
                  precision: str = "float"):
         super().__init__(cfg, params, precision)
         self.n_slots = int(slots or batch_size or 4)
-        self.policy = BucketPolicy(buckets or (prompt_len or 32,))
+        self.max_prompt = int(max_prompt or prompt_len or 32)
+        self.chunk = int(prefill_chunk)
+        # fairness knob: prefill tokens spent per decode step once any
+        # slot is actively decoding (floored at one chunk so admission
+        # always progresses); see docs/scheduling.md for the trade-off.
+        self.prefill_budget = int(prefill_token_budget or self.chunk)
         self.max_new = int(max_new_tokens)
         self.max_new_cap = int(max_new_cap or max(self.max_new, 1))
-        # Capacity rounds up to the flash-decode KV block so the kernel
-        # never pads the cache per step; the tail is dead capacity the
-        # per-slot kv_len bound skips without reading.
-        need = self.policy.max_bucket + self.max_new_cap
-        self.capacity = -(-need // KV_BLOCK) * KV_BLOCK
+        self.capacity = self._slot_capacity()
         # effective flash-decode block at this capacity (mirrors the
         # kernel's choice: min(128, S), halved until it divides S) —
         # the HBM-read metric quantizes to it
@@ -184,12 +282,7 @@ class ContinuousBatchServer(_ServerBase):
         self._kv_block = bk
         self.eos_id = eos_id
         self.sched = SlotScheduler(self.n_slots)
-        self.prefill = jax.jit(make_prefill_step(cfg, policy=self.prec))
-        # the cache is dead after every call (immediately reassigned):
-        # donate it so steps update rows in place instead of copying the
-        # whole KV allocation per token
-        self._write = jax.jit(write_slot, donate_argnums=(0,))
-        self._release = jax.jit(release_slot, donate_argnums=(0,))
+        self._init_slot_steps(self.n_slots)
         self.artifact = None
         if use_artifact:
             from repro.core.eon_compiler import compile_serve_decode
@@ -201,10 +294,6 @@ class ContinuousBatchServer(_ServerBase):
             self.decode = jax.jit(
                 make_slot_decode_step(cfg, policy=self.prec),
                 donate_argnums=(1,))
-        self.cache = alloc_decode_cache(cfg, self.n_slots, self.capacity,
-                                        self.prec)
-        # host mirror of the last emitted token per slot (decode feed)
-        self._cur = np.zeros((self.n_slots,), np.int32)
 
     # ------------------------------------------------------------------
     def submit(self, prompts: List[np.ndarray],
@@ -216,65 +305,56 @@ class ContinuousBatchServer(_ServerBase):
         return reqs
 
     # ------------------------------------------------------------------
-    def _admit(self, slot, req: Request, step_clock: int) -> bool:
-        """Prefill into the smallest bucket and splice into the slot.
-        Returns True when the request keeps the slot (needs decoding)."""
-        bucket = self.policy.bucket_for(len(req.prompt))
-        tokens, positions, plen = _left_pad(req.prompt, bucket)
-        inputs = {"tokens": jnp.asarray(tokens[None, :]),
-                  "positions": jnp.asarray(positions[None, :])}
-        next_tok, _, small = self.prefill(self.params, inputs)
-        tok0 = int(np.asarray(next_tok)[0])
-        req.tokens.append(tok0)
-        req.first_token_at = time.perf_counter()
-        req.admitted_step = step_clock
-        if req.max_new_tokens <= 1 or tok0 == self.eos_id:
-            self._finish(req, step_clock)
-            return False
-        self.cache = self._write(self.cache, small, slot.index)
-        slot.occupy(req.rid, plen, bucket, req.max_new_tokens)
-        self._cur[slot.index] = tok0
-        return True
-
-    def _finish(self, req: Request, step_clock: int) -> None:
-        req.done = True
-        req.finished_at = time.perf_counter()
-        req.finished_step = step_clock
-
-    # ------------------------------------------------------------------
     def run(self) -> Dict[str, float]:
         """Serve until queue and slots drain; returns latency metrics."""
         t0 = time.perf_counter()
-        served: List[Request] = []
+        self._served: List[Request] = []
         decode_steps = 0
-        prefills = 0
+        prefill_chunks = 0
         occupancy: List[int] = []
         kv_fill: List[int] = []   # Σ block-rounded kv_len per decode step
-        kv_raw: List[int] = []    # Σ kv_len per decode step (slot fill)
+        kv_raw: List[int] = []    # Σ kv_len per decode step (exact fill)
 
         while self.sched.busy:
             # Admission: freed slots pick up waiting requests *now*, not
             # at the end of a batch — the continuous-batching invariant.
+            # One slot-row reset on device; the prefill compute itself
+            # is chunked below.
             for slot, req in self.sched.admissions():
-                prefills += 1
-                if not self._admit(slot, req, decode_steps):
-                    served.append(req)
+                self.cache = self._reset(self.cache, self._empty_row,
+                                         slot.index)
+                slot.occupy(req.rid, req.prompt, req.max_new_tokens)
+                req.admitted_step = decode_steps
+
+            # Budgeted chunk prefill, oldest request first: at most
+            # prefill_budget prompt tokens per decode step (always at
+            # least one chunk), so active slots keep emitting while long
+            # prompts stream in.
+            spent = 0
+            for slot in sorted(self.sched.prefilling_slots(),
+                               key=lambda s: s.rid):
+                while slot.prefilling and spent < self.prefill_budget:
+                    self._run_chunk(slot, decode_steps)
+                    prefill_chunks += 1
+                    spent += self.chunk
+                if spent >= self.prefill_budget:
+                    break
+
             active = self.sched.active_slots()
             if not active:
                 continue
 
             tok = np.array(self._cur)
             pos = np.zeros((self.n_slots,), np.int32)
-            widx = np.full((self.n_slots,), self.capacity - 1, np.int32)
-            # per-slot KV high-water mark: the decode kernel reads only
-            # kv_len rows per slot (0 = idle slot, skipped outright)
+            # per-slot fill: pad-free, so fill == position + 1 exactly
+            # (0 = idle or mid-prefill slot: skipped outright, and the
+            # step suppresses its writes)
             kvl = np.zeros((self.n_slots,), np.int32)
             for s in active:
                 pos[s.index] = s.position
-                widx[s.index] = s.write_idx
-                kvl[s.index] = s.write_idx + 1
+                kvl[s.index] = s.position + 1
             ntok, _, self.cache = self.decode(self.params, self.cache,
-                                              tok, pos, widx, kvl)
+                                              tok, pos, kvl)
             decode_steps += 1
             occupancy.append(len(active))
             # block-granular: the kernel fetches whole KV blocks, and
@@ -292,16 +372,18 @@ class ContinuousBatchServer(_ServerBase):
                 self._cur[s.index] = t
                 if s.generated >= s.max_new or t == self.eos_id:
                     self._finish(req, decode_steps)
-                    served.append(req)
                     self.cache = self._release(self.cache, s.index)
                     s.release()
 
+        served = self._served
         wall = time.perf_counter() - t0
         self.metrics = _summarize(served, wall, engine="continuous",
                                   decode_steps=decode_steps,
-                                  prefills=prefills, occupancy=occupancy,
+                                  prefills=prefill_chunks,
+                                  occupancy=occupancy,
                                   n_slots=self.n_slots)
         self.metrics["precision"] = self.precision
+        self.metrics["prefill_chunk"] = self.chunk
         self.metrics["kv_cache_bytes"] = decode_cache_nbytes(self.cache)
         if kv_fill:
             # fraction of the slots × capacity rectangle the bounded
@@ -309,8 +391,9 @@ class ContinuousBatchServer(_ServerBase):
             # granular at the kernel's effective block, and exact only
             # for the kv_len-bounded full-attention leaves — ring/local
             # caches carry their own position-based bound.
-            # kv_fill_frac is the raw slot fill (entries), the floor the
-            # read fraction approaches as capacity / block grows.
+            # kv_fill_frac is the exact live fill (entries) — pad-free,
+            # so it counts only real prompt/generated tokens — the floor
+            # the read fraction approaches as capacity / block grows.
             denom = self.n_slots * self.capacity
             self.metrics["kv_read_frac"] = float(np.mean(kv_fill) / denom)
             self.metrics["kv_fill_frac"] = float(np.mean(kv_raw) / denom)
@@ -322,21 +405,28 @@ class ContinuousBatchServer(_ServerBase):
 class StaticBatchServer(_ServerBase):
     """Static batching baseline: the queue is drained in fixed batches
     and every batch decodes until its *slowest* member finishes — slots
-    are never recycled mid-flight.  Token-for-token it matches the
-    continuous engine (same left-pad masking); only scheduling differs.
+    are never recycled mid-flight.  Prefill uses the same pad-free chunk
+    steps as the continuous engine (run to completion up front, no
+    interleaving), so token-for-token the two engines match on every
+    architecture family; only scheduling differs.
     """
 
     def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 4,
-                 prompt_len: int = 32, max_new_tokens: int = 16,
+                 max_prompt: Optional[int] = None,
+                 prefill_chunk: int = 8,
+                 prompt_len: Optional[int] = None,
+                 max_new_tokens: int = 16,
                  precision: str = "float"):
         super().__init__(cfg, params, precision)
         self.batch_size = int(batch_size)
-        self.prompt_len = int(prompt_len)
+        self.max_prompt = int(max_prompt or prompt_len or 32)
+        self.chunk = int(prefill_chunk)
         self.max_new = int(max_new_tokens)
         self.max_new_cap = self.max_new
+        self.eos_id = None
+        self.capacity = self._slot_capacity()
         self.queue: List[Request] = []
-        self._cache_bytes = 0
-        self.prefill = jax.jit(make_prefill_step(cfg, policy=self.prec))
+        self._init_slot_steps(self.batch_size)
         self.decode = jax.jit(
             make_slot_decode_step(cfg, policy=self.prec),
             donate_argnums=(1,))
@@ -349,64 +439,61 @@ class StaticBatchServer(_ServerBase):
         return reqs
 
     def run(self) -> Dict[str, float]:
+        from repro.serve.scheduler import Slot
         t0 = time.perf_counter()
-        served: List[Request] = []
+        self._served: List[Request] = []
         decode_steps = 0
-        prefills = 0
-        self._cache_bytes = 0
+        prefill_chunks = 0
         while self.queue:
             batch = self.queue[:self.batch_size]
             self.queue = self.queue[self.batch_size:]
-            b = len(batch)
-            tokens = np.zeros((b, self.prompt_len), np.int32)
-            positions = np.full((b, self.prompt_len), -1, np.int32)
-            plens = np.zeros((b,), np.int32)
+            slots = []
             for i, r in enumerate(batch):
-                tokens[i], positions[i], plens[i] = _left_pad(
-                    r.prompt, self.prompt_len)
-            next_tok, _, cache = self.prefill(
-                self.params, {"tokens": jnp.asarray(tokens),
-                              "positions": jnp.asarray(positions)})
-            prefills += 1
-            horizon = max(r.max_new_tokens for r in batch) - 1
-            cache = grow_cache(self.cfg, cache, horizon + 1)
-            self._cache_bytes = max(self._cache_bytes,
-                                    decode_cache_nbytes(cache))
-            now = time.perf_counter()
-            ntok = np.asarray(next_tok)
-            for i, r in enumerate(batch):
-                r.tokens.append(int(ntok[i]))
-                r.first_token_at = now
+                self.cache = self._reset(self.cache, self._empty_row, i)
+                slot = Slot(i)
+                slot.occupy(r.rid, r.prompt, r.max_new_tokens)
                 r.admitted_step = decode_steps
-                if r.max_new_tokens <= 1:
-                    r.done = True
-                    r.finished_at = now
-                    r.finished_step = decode_steps
-            cur = next_tok
-            for step in range(horizon):
-                pos = jnp.asarray(plens + step)
-                widx = jnp.full((b,), self.prompt_len + step, jnp.int32)
-                kvl = jnp.full((b,), self.prompt_len + step + 1, jnp.int32)
-                cur, _, cache = self.decode(self.params, cache, cur, pos,
-                                            widx, kvl)
+                while slot.prefilling:      # full prefill, no interleave
+                    self._run_chunk(slot, decode_steps)
+                    prefill_chunks += 1
+                slots.append(slot)
+            horizon = max(r.max_new_tokens for r in batch) - 1
+            # the batch decodes as one unit until its slowest member
+            # drains; finished rows keep stepping (outputs discarded)
+            for _ in range(horizon):
+                if not any(s.active for s in slots):
+                    break
+                tok = np.array(self._cur)
+                pos = np.zeros((self.batch_size,), np.int32)
+                kvl = np.zeros((self.batch_size,), np.int32)
+                for s in slots:
+                    if s.active:
+                        pos[s.index] = s.position
+                        kvl[s.index] = s.position + 1
+                ntok, _, self.cache = self.decode(self.params, self.cache,
+                                                  tok, pos, kvl)
                 decode_steps += 1
-                ctok = np.asarray(cur)
-                for i, r in enumerate(batch):
+                ntok_h = np.asarray(ntok)
+                for s in slots:
+                    if not s.active:
+                        continue
+                    r = self.requests[s.rid]
+                    t = int(ntok_h[s.index])
+                    s.advance()
+                    self._cur[s.index] = t
                     if not r.done:
-                        r.tokens.append(int(ctok[i]))
+                        r.tokens.append(t)
                         if len(r.tokens) >= r.max_new_tokens:
-                            r.done = True
-                            r.finished_at = time.perf_counter()
-                            r.finished_step = decode_steps
-            served.extend(batch)
+                            self._finish(r, decode_steps)
 
+        served = self._served
         wall = time.perf_counter() - t0
         self.metrics = _summarize(served, wall, engine="static",
                                   decode_steps=decode_steps,
-                                  prefills=prefills)
+                                  prefills=prefill_chunks)
         self.metrics["precision"] = self.precision
-        if self._cache_bytes:
-            self.metrics["kv_cache_bytes"] = self._cache_bytes
+        self.metrics["prefill_chunk"] = self.chunk
+        self.metrics["kv_cache_bytes"] = decode_cache_nbytes(self.cache)
         return self.metrics
 
 

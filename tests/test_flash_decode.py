@@ -173,15 +173,15 @@ def _reference_decode(cfg, params, prompt, max_new, policy=None):
 @pytest.mark.parametrize("arch", ["internlm2-1.8b", "gemma3-4b"])
 def test_continuous_serving_interpret_float(arch, interpret_path):
     """Slot-recycled serving through the Pallas (interpret) decode kernel
-    — per-slot kv_len bounding, left-pad buckets, ring caches — is
+    — per-slot kv_len bounding, chunked pad-free prefill, ring caches —
     token-exact vs an unpadded contiguous decode on the same path."""
     cfg, params = _setup(arch)
     rng = np.random.RandomState(5)
     lens, budgets = [3, 9, 6], [4, 3, 5]
     prompts = [rng.randint(0, cfg.vocab_size, n).astype(np.int32)
                for n in lens]
-    srv = ContinuousBatchServer(cfg, params, slots=2, buckets=(4, 16),
-                                max_new_tokens=8)
+    srv = ContinuousBatchServer(cfg, params, slots=2, max_prompt=16,
+                                prefill_chunk=4, max_new_tokens=8)
     reqs = srv.submit(prompts, max_new_tokens=budgets)
     srv.run()
     for r, p, bud in zip(reqs, prompts, budgets):
@@ -202,12 +202,13 @@ def test_continuous_serving_interpret_int8_vs_fakequant(arch,
     lens, budgets = [3, 8, 5], [4, 3, 5]
     prompts = [rng.randint(0, cfg.vocab_size, n).astype(np.int32)
                for n in lens]
-    srv = ContinuousBatchServer(cfg, params, slots=2, buckets=(4, 16),
-                                max_new_tokens=8, precision="int8")
+    srv = ContinuousBatchServer(cfg, params, slots=2, max_prompt=16,
+                                prefill_chunk=4, max_new_tokens=8,
+                                precision="int8")
     reqs = srv.submit(prompts, max_new_tokens=budgets)
     srv.run()
-    oracle = ContinuousBatchServer(cfg, params, slots=2, buckets=(4, 16),
-                                   max_new_tokens=8,
+    oracle = ContinuousBatchServer(cfg, params, slots=2, max_prompt=16,
+                                   prefill_chunk=4, max_new_tokens=8,
                                    precision="int8_fakequant")
     oreqs = oracle.submit(prompts, max_new_tokens=budgets)
     oracle.run()
@@ -232,7 +233,7 @@ def test_int8_decode_never_dequantizes_cache(monkeypatch):
     rng = np.random.RandomState(7)
     prompts = [rng.randint(0, cfg.vocab_size, 5).astype(np.int32)
                for _ in range(2)]
-    srv = ContinuousBatchServer(cfg, params, slots=2, buckets=(8,),
+    srv = ContinuousBatchServer(cfg, params, slots=2, max_prompt=8,
                                 max_new_tokens=4, precision="int8")
     srv.submit(prompts)
     srv.run()

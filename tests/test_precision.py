@@ -204,7 +204,7 @@ def _fake_quant_reference(cfg, qparams, prompt, max_new):
 
 
 def test_int8_serving_token_exact(setup):
-    """Continuous int8 serving (bucketed left-pad prefill, slot-recycled
+    """Continuous int8 serving (chunked pad-free prefill, slot-recycled
     Int8KV cache, ref kernel path) == fake-quant float reference."""
     cfg, params = setup
     rng = np.random.RandomState(4)
@@ -212,8 +212,9 @@ def test_int8_serving_token_exact(setup):
     budgets = [5, 4, 6]
     prompts = [rng.randint(0, cfg.vocab_size, n).astype(np.int32)
                for n in lens]
-    srv = ContinuousBatchServer(cfg, params, slots=2, buckets=(4, 8, 16),
-                                max_new_tokens=8, precision="int8")
+    srv = ContinuousBatchServer(cfg, params, slots=2, max_prompt=16,
+                                prefill_chunk=4, max_new_tokens=8,
+                                precision="int8")
     reqs = srv.submit(prompts, max_new_tokens=budgets)
     m = srv.run()
     assert m["precision"] == "int8"
@@ -238,11 +239,11 @@ def test_static_and_continuous_agree_int8(setup):
     prompts = [rng.randint(0, cfg.vocab_size, n).astype(np.int32)
                for n in (4, 9, 6)]
     budgets = [3, 5, 2]
-    stat = StaticBatchServer(cfg, params, batch_size=2, prompt_len=16,
+    stat = StaticBatchServer(cfg, params, batch_size=2, max_prompt=16,
                              max_new_tokens=8, precision="int8")
     sreqs = stat.submit(prompts, max_new_tokens=budgets)
     ms = stat.run()
-    cont = ContinuousBatchServer(cfg, params, slots=2, buckets=(16,),
+    cont = ContinuousBatchServer(cfg, params, slots=2, max_prompt=16,
                                  max_new_tokens=8, precision="int8")
     creqs = cont.submit(prompts, max_new_tokens=budgets)
     cont.run()
@@ -290,9 +291,10 @@ def test_compile_serve_decode_int8_reports_hbm_delta(setup):
     mem = art.memory
     assert mem["kv_cache_bytes_float"] / mem["kv_cache_bytes"] >= 2.0
     # the serialized executable stays runnable; decode signature is
-    # (params, cache, token, position, write_idx, kv_len)
+    # (params, cache, token, position, kv_len) — index == position under
+    # pad-free admission, so there is no separate write_idx operand
     fn = art.rehydrate()
     cache = alloc_decode_cache(cfg, 2, 12, qz.INT8)
     tok = jnp.zeros((2,), jnp.int32)
-    ntok, _, _ = fn(qparams, cache, tok, tok, tok, tok)
+    ntok, _, _ = fn(qparams, cache, tok, tok, tok)
     assert ntok.shape == (2,)

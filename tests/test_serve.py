@@ -2,8 +2,9 @@
 
 Covers the scheduler invariants the engine is built on: slot recycling
 admits queued work before the batch drains, per-request budgets are
-honored in-step, left-padded bucket prefill is token-exact versus an
-unpadded no-batching reference decode, and metrics are sane.
+honored in-step, chunked pad-free prefill is token-exact versus an
+unpadded no-batching reference decode, over-capacity prompts error
+explicitly (never silently truncate), and metrics are sane.
 """
 import jax
 import jax.numpy as jnp
@@ -14,10 +15,11 @@ from repro import configs
 from repro.models import api
 from repro.models.params import init_params
 from repro.serve.kvcache import (alloc_decode_cache, grow_cache,
-                                 release_slot, write_slot)
-from repro.serve.scheduler import BucketPolicy, SlotScheduler
+                                 put_slot, release_slot, slot_batch_axes,
+                                 take_slot)
+from repro.serve.scheduler import Slot, SlotScheduler
 from repro.serve.server import (ContinuousBatchServer, StaticBatchServer,
-                                _left_pad)
+                                _chunk_rows)
 
 ARCH = "internlm2-1.8b"
 
@@ -47,15 +49,23 @@ def _reference_decode(cfg, params, prompt, max_new):
 
 
 # ---------------------------------------------------------------------------
-# Scheduler / bucket units (host-side, no model)
+# Scheduler units (host-side, no model)
 # ---------------------------------------------------------------------------
-def test_bucket_policy():
-    p = BucketPolicy((32, 8, 16))
-    assert p.buckets == (8, 16, 32)
-    assert p.bucket_for(1) == 8
-    assert p.bucket_for(8) == 8
-    assert p.bucket_for(9) == 16
-    assert p.bucket_for(999) == 32   # truncation bucket
+def test_slot_lifecycle():
+    """FREE → PREFILLING → ACTIVE → FREE, with the pad-free invariant
+    write_idx == position == prompt_len at decode start."""
+    s = Slot(0)
+    assert s.free and not s.prefilling and not s.active
+    s.occupy(rid=7, prompt=np.arange(11, dtype=np.int32), max_new=4)
+    assert s.prefilling and not s.active and not s.free
+    s.chunk_pos = 11
+    s.begin_decode()
+    assert s.active and not s.prefilling
+    assert s.position == 11 and s.write_idx == 11 and s.generated == 1
+    s.advance()
+    assert s.position == 12 and s.write_idx == 12
+    s.release()
+    assert s.free and s.prompt is None
 
 
 def test_slot_scheduler_fcfs():
@@ -64,17 +74,38 @@ def test_slot_scheduler_fcfs():
     adm = s.admissions()
     assert [r for _, r in adm] == ["a", "b"]
     for slot, _ in adm:
-        slot.occupy(rid=1, prompt_len=4, bucket=8, max_new=4)
+        slot.occupy(rid=1, prompt=np.arange(4, dtype=np.int32), max_new=4)
     assert s.admissions() == []      # no free slot for "c"
     adm[0][0].release()
     assert [r for _, r in s.admissions()] == ["c"]
 
 
-def test_left_pad_positions():
-    tokens, positions, plen = _left_pad(np.array([7, 8, 9], np.int32), 6)
-    assert plen == 3
-    assert list(tokens) == [0, 0, 0, 7, 8, 9]
-    assert list(positions) == [-1, -1, -1, 0, 1, 2]
+def test_chunk_rows():
+    assert _chunk_rows(8, 8) == 8
+    assert _chunk_rows(9, 8) == 16
+    assert _chunk_rows(1, 8) == 8
+    assert _chunk_rows(16, 4) == 16
+
+
+def test_over_capacity_prompt_errors(setup):
+    """No silent truncation: a prompt that cannot fit a slot errors at
+    submit (the old bucket policy kept the most recent tokens and
+    silently dropped the rest)."""
+    cfg, params = setup
+    srv = ContinuousBatchServer(cfg, params, slots=1, max_prompt=16,
+                                max_new_tokens=8)
+    rng = np.random.RandomState(0)
+    with pytest.raises(ValueError, match="cache rows"):
+        srv.submit([rng.randint(0, cfg.vocab_size, 200).astype(np.int32)])
+    with pytest.raises(ValueError, match="empty"):
+        srv.submit([np.zeros((0,), np.int32)])
+    # submit is atomic: a rejected batch registers nothing, even when
+    # earlier prompts in it were fine
+    ok = rng.randint(0, cfg.vocab_size, 5).astype(np.int32)
+    bad = rng.randint(0, cfg.vocab_size, 200).astype(np.int32)
+    with pytest.raises(ValueError):
+        srv.submit([ok, bad])
+    assert srv.requests == {} and not srv.sched.waiting
 
 
 # ---------------------------------------------------------------------------
@@ -87,8 +118,8 @@ def test_slot_recycling_admits_before_drain(setup):
     rng = np.random.RandomState(0)
     prompts = [rng.randint(0, cfg.vocab_size, 6).astype(np.int32)
                for _ in range(3)]
-    srv = ContinuousBatchServer(cfg, params, slots=2, buckets=(8,),
-                                max_new_tokens=12)
+    srv = ContinuousBatchServer(cfg, params, slots=2, max_prompt=8,
+                                prefill_chunk=8, max_new_tokens=12)
     # slot 0 finishes early (2 tokens), slot 1 runs long (12); request 3
     # must start before request 2 finishes.
     r1, r2, r3 = srv.submit(prompts, max_new_tokens=[2, 12, 6])
@@ -107,7 +138,7 @@ def test_per_request_max_new_honored(setup):
     budgets = [1, 3, 7, 5]
     prompts = [rng.randint(0, cfg.vocab_size, 5).astype(np.int32)
                for _ in budgets]
-    srv = ContinuousBatchServer(cfg, params, slots=2, buckets=(8,),
+    srv = ContinuousBatchServer(cfg, params, slots=2, max_prompt=8,
                                 max_new_tokens=8)
     reqs = srv.submit(prompts, max_new_tokens=budgets)
     m = srv.run()
@@ -115,22 +146,22 @@ def test_per_request_max_new_honored(setup):
     assert m["tokens_generated"] == sum(budgets)
 
 
-def test_leftpad_prefill_matches_reference(setup):
-    """Bucketed left-pad prefill + slot decode must be token-exact vs an
-    unpadded single-request decode (attention masks reject pos −1)."""
+def test_chunked_prefill_matches_reference(setup):
+    """Chunked pad-free prefill + slot decode must be token-exact vs an
+    unpadded single-request decode (no pad row ever enters the cache)."""
     cfg, params = setup
     rng = np.random.RandomState(2)
     lens = [3, 11, 7, 16]
     budgets = [5, 4, 6, 3]
     prompts = [rng.randint(0, cfg.vocab_size, n).astype(np.int32)
                for n in lens]
-    srv = ContinuousBatchServer(cfg, params, slots=2, buckets=(4, 8, 16),
-                                max_new_tokens=8)
+    srv = ContinuousBatchServer(cfg, params, slots=2, max_prompt=16,
+                                prefill_chunk=4, max_new_tokens=8)
     reqs = srv.submit(prompts, max_new_tokens=budgets)
     srv.run()
     for r, p, b in zip(reqs, prompts, budgets):
         assert r.tokens == _reference_decode(cfg, params, p, b), \
-            f"rid {r.rid}: padded serve diverged from reference"
+            f"rid {r.rid}: chunked serve diverged from reference"
 
 
 def test_static_and_continuous_agree(setup):
@@ -140,11 +171,11 @@ def test_static_and_continuous_agree(setup):
     prompts = [rng.randint(0, cfg.vocab_size, n).astype(np.int32)
                for n in (4, 9, 12, 6)]
     budgets = [3, 6, 2, 5]
-    stat = StaticBatchServer(cfg, params, batch_size=2, prompt_len=16,
+    stat = StaticBatchServer(cfg, params, batch_size=2, max_prompt=16,
                              max_new_tokens=8)
     sreqs = stat.submit(prompts, max_new_tokens=budgets)
     stat.run()
-    cont = ContinuousBatchServer(cfg, params, slots=2, buckets=(16,),
+    cont = ContinuousBatchServer(cfg, params, slots=2, max_prompt=16,
                                  max_new_tokens=8)
     creqs = cont.submit(prompts, max_new_tokens=budgets)
     cont.run()
@@ -156,7 +187,7 @@ def test_metrics_sanity(setup):
     rng = np.random.RandomState(4)
     prompts = [rng.randint(0, cfg.vocab_size, 6).astype(np.int32)
                for _ in range(4)]
-    srv = ContinuousBatchServer(cfg, params, slots=2, buckets=(8,),
+    srv = ContinuousBatchServer(cfg, params, slots=2, max_prompt=8,
                                 max_new_tokens=4)
     reqs = srv.submit(prompts)
     m = srv.run()
@@ -165,21 +196,30 @@ def test_metrics_sanity(setup):
     assert m["tokens_generated"] == 16
     assert 0 < m["ttft_p50_s"] <= m["ttft_p95_s"]
     assert 0 < m["slot_utilization"] <= 1.0
+    assert m["prefill_chunks"] >= 4       # ≥ one chunk per request
+    # pad-free: the measured fill can never exceed what live tokens
+    # occupy (pads used to inflate this)
+    assert 0 < m["kv_fill_frac"] <= 1.0
     # TTFT ordering: requests admitted later can't have earlier first
     # tokens (FCFS admission, monotone clock)
     firsts = [r.first_token_at for r in reqs]
     assert firsts == sorted(firsts)
 
 
-def test_slot_cache_write_release_isolated(setup):
-    """write_slot touches exactly one row; release_slot invalidates it."""
+def test_slot_view_isolated(setup):
+    """take_slot/put_slot touch exactly one row; release_slot
+    invalidates it (positions only — K/V bytes stay unreachable)."""
     cfg, params = setup
+    axes = slot_batch_axes(cfg, 3, 12)
     cache = alloc_decode_cache(cfg, slots=3, capacity=12)
     assert np.all(np.asarray(cache["full_pos"]) == -1)
+    # run one chunk into slot 1's view and splice it back
     fns = api.model_fns(cfg)
+    small = take_slot(cache, axes, 1)
     toks = jnp.asarray(np.arange(8, dtype=np.int32)[None, :])
-    _, small = fns.forward_prefill(cfg, params, {"tokens": toks})
-    cache2 = write_slot(cache, small, 1)
+    pos = jnp.asarray(np.arange(8, dtype=np.int32)[None, :])
+    _, small2 = fns.forward_prefill_chunk(cfg, params, small, toks, pos)
+    cache2 = put_slot(cache, small2, axes, 1)
     fp = np.asarray(cache2["full_pos"])
     assert np.all(fp[[0, 2]] == -1), "neighbor rows disturbed"
     assert list(fp[1][:8]) == list(range(8))
@@ -229,23 +269,28 @@ def test_kv_cache_bytes_encdec_sizing():
 
 
 # ---------------------------------------------------------------------------
-# Slot lifecycle: alloc → write → release → re-admit, float and int8
+# Slot lifecycle: reset → chunked prefill → release → re-admit, float + int8
 # ---------------------------------------------------------------------------
 from repro.core import quantize as qz  # noqa: E402
 
 
-def test_slot_cache_write_release_isolated_int8(setup):
-    """The int8 cache (Int8KV pairs) honors the same slot API contract:
-    one row spliced, neighbors untouched, release invalidates positions
-    while the paired q/scale bytes stay."""
+def test_slot_view_isolated_int8(setup):
+    """The int8 cache (Int8KV pairs) honors the same slot-view contract:
+    one row written through a chunk, neighbors untouched, release
+    invalidates positions while the paired q/scale bytes stay."""
     cfg, params = setup
+    qparams = qz.quantize_model_params(params, qz.INT8)
+    axes = slot_batch_axes(cfg, 3, 12, qz.INT8)
     cache = alloc_decode_cache(cfg, slots=3, capacity=12, policy=qz.INT8)
     assert isinstance(cache["k"], qz.Int8KV)
     fns = api.model_fns(cfg)
+    small = take_slot(cache, axes, 1)
     toks = jnp.asarray(np.arange(8, dtype=np.int32)[None, :])
-    _, small = fns.forward_prefill(cfg, params, {"tokens": toks}, qz.INT8)
-    assert isinstance(small["k"], qz.Int8KV)
-    cache2 = write_slot(cache, small, 1)
+    pos = jnp.asarray(np.arange(8, dtype=np.int32)[None, :])
+    _, small2 = fns.forward_prefill_chunk(cfg, qparams, small, toks, pos,
+                                          policy=qz.INT8)
+    assert isinstance(small2["k"], qz.Int8KV)
+    cache2 = put_slot(cache, small2, axes, 1)
     fp = np.asarray(cache2["full_pos"])
     assert np.all(fp[[0, 2]] == -1), "neighbor rows disturbed"
     assert list(fp[1][:8]) == list(range(8))
@@ -254,7 +299,7 @@ def test_slot_cache_write_release_isolated_int8(setup):
     assert np.array_equal(q2[..., 0, :, :, :], q0[..., 0, :, :, :])
     assert not np.array_equal(q2[..., 1, :8, :, :],
                               np.zeros_like(q2[..., 1, :8, :, :]))
-    assert np.all(s2[..., 1, :8, :] > 0), "scales not spliced with values"
+    assert np.all(s2[..., 1, :8, :] > 0), "scales not written with values"
     cache3 = release_slot(cache2, 1)
     assert np.all(np.asarray(cache3["full_pos"]) == -1)
     assert np.array_equal(np.asarray(cache3["k"].q), q2)
@@ -262,9 +307,9 @@ def test_slot_cache_write_release_isolated_int8(setup):
 
 @pytest.mark.parametrize("precision", ["float", "int8"])
 def test_slot_reuse_after_release_exact(setup, precision):
-    """A slot that went alloc → write → release must serve its next
-    request exactly: stale KV from the previous occupant (bytes are kept,
-    only positions are wiped) can never leak into attention."""
+    """A slot that went reset → chunked prefill → release must serve its
+    next request exactly: stale KV from the previous occupant (bytes are
+    kept, only positions are wiped) can never leak into attention."""
     cfg, params = setup
     if precision == "int8":
         import dataclasses
@@ -274,8 +319,9 @@ def test_slot_reuse_after_release_exact(setup, precision):
                for n in (6, 9, 4)]
     budgets = [4, 3, 5]
     # one slot: every request reuses the same cache row sequentially
-    srv = ContinuousBatchServer(cfg, params, slots=1, buckets=(16,),
-                                max_new_tokens=8, precision=precision)
+    srv = ContinuousBatchServer(cfg, params, slots=1, max_prompt=16,
+                                prefill_chunk=4, max_new_tokens=8,
+                                precision=precision)
     reqs = srv.submit(prompts, max_new_tokens=budgets)
     srv.run()
     if precision == "float":
@@ -285,8 +331,9 @@ def test_slot_reuse_after_release_exact(setup, precision):
         # fresh single-request int8 servers: no prior slot occupancy
         refs = []
         for p, b in zip(prompts, budgets):
-            one = ContinuousBatchServer(cfg, params, slots=1, buckets=(16,),
-                                        max_new_tokens=8, precision="int8")
+            one = ContinuousBatchServer(cfg, params, slots=1, max_prompt=16,
+                                        prefill_chunk=4, max_new_tokens=8,
+                                        precision="int8")
             (r,) = one.submit([p], max_new_tokens=[b])
             one.run()
             refs.append(r.tokens)
@@ -295,7 +342,7 @@ def test_slot_reuse_after_release_exact(setup, precision):
 
 
 # ---------------------------------------------------------------------------
-# Sliding-window ring reconstruction (local_global arch), float + int8
+# Sliding-window ring caches (local_global arch), float + int8
 # ---------------------------------------------------------------------------
 RING_ARCH = "gemma3-4b"
 
@@ -334,25 +381,26 @@ def test_ring_prefill_quantizes_after_gather(ring_setup):
 @pytest.mark.parametrize("precision", ["float", "int8"])
 def test_ring_serving_token_exact(ring_setup, precision):
     """Continuous serving on a local:global sliding-window arch — ring
-    caches rebuilt from left-padded bucket prefills, ring-slot decode
-    writes — is token-exact vs the contiguous reference (float) or the
-    fake-quant float simulation (int8)."""
+    caches filled by chunked scatter writes, ring-slot decode writes —
+    is token-exact vs the contiguous reference (float) or the fake-quant
+    float simulation (int8)."""
     cfg, params = ring_setup
     rng = np.random.RandomState(8)
     lens = [5, 12, 9]
     budgets = [4, 6, 3]
     prompts = [rng.randint(0, cfg.vocab_size, n).astype(np.int32)
                for n in lens]
-    srv = ContinuousBatchServer(cfg, params, slots=2, buckets=(8, 16),
-                                max_new_tokens=8, precision=precision)
+    srv = ContinuousBatchServer(cfg, params, slots=2, max_prompt=16,
+                                prefill_chunk=8, max_new_tokens=8,
+                                precision=precision)
     reqs = srv.submit(prompts, max_new_tokens=budgets)
     srv.run()
     if precision == "float":
         refs = [_reference_decode(cfg, params, p, b)
                 for p, b in zip(prompts, budgets)]
     else:
-        fq = ContinuousBatchServer(cfg, params, slots=2, buckets=(8, 16),
-                                   max_new_tokens=8,
+        fq = ContinuousBatchServer(cfg, params, slots=2, max_prompt=16,
+                                   prefill_chunk=8, max_new_tokens=8,
                                    precision="int8_fakequant")
         fq.submit(prompts, max_new_tokens=budgets)
         fq.run()
