@@ -29,6 +29,17 @@ REPRO_KERNEL_PATH=interpret python benchmarks/serve_bench.py --tiny \
     --precision int8 --prefill-chunk 4
 
 echo
+echo "=== paged KV serving (block tables, prefix reuse, preemption) ==="
+# Paged-pool engine end-to-end through the Pallas interpreter, float AND
+# int8 in one run: a shared-prefix workload against a pool sized to
+# force preempt-and-recompute (the summary line reports preemptions ≥ 1,
+# prefix-hit rate, and live-KV HBM vs the contiguous rectangle);
+# token-exactness vs the contiguous engine is asserted inside the bench.
+REPRO_KERNEL_PATH=interpret python benchmarks/serve_bench.py \
+    --requests 6 --slots 3 --max-prompt 24 --max-new 24 \
+    --precision int8 --paged-only --pool-frac 0.34
+
+echo
 echo "=== decode-kernel parity (Pallas lowering via interpret mode) ==="
 # Pin every kernels/ops dispatch to the Pallas interpreter so the
 # flash-decode lowering is exercised on every smoke run, not just on TPU:

@@ -110,8 +110,10 @@ def compile_impulse(impulse, batch_size: int = 1,
 
 
 def compile_serve_decode(cfg, params, *, slots: int, capacity: int,
-                         rules=None, mesh=None,
-                         policy=None) -> CompiledArtifact:
+                         rules=None, mesh=None, policy=None,
+                         pool_blocks: Optional[int] = None,
+                         block_size: Optional[int] = None
+                         ) -> CompiledArtifact:
     """Serve-from-artifact hook (paper C4, end-to-end): AOT-compile the
     continuous-batching decode step into a ``CompiledArtifact`` so the
     server's hot loop runs the same kind of serialized executable we
@@ -131,26 +133,59 @@ def compile_serve_decode(cfg, params, *, slots: int, capacity: int,
     is gone; ``kv_len`` (slots,) is the scheduler's exact per-slot fill
     (``position + 1``; 0 = idle or mid-prefill slot, whose row the step
     neither reads nor writes).
-    """
-    from repro.serve.kvcache import abstract_decode_cache, decode_cache_nbytes
-    from repro.serve.serve_step import make_slot_decode_step
 
-    step = make_slot_decode_step(cfg, rules=rules, mesh=mesh, policy=policy)
+    ``pool_blocks`` compiles the **paged** variant instead: the cache is
+    the paged pool (``kvcache.abstract_paged_cache``) and the signature
+    grows the per-slot block table — ``(params, cache, token, position,
+    kv_len, block_table)`` with ``block_table`` (slots, capacity // BS)
+    int32.  The resource report then prices the pool per block
+    (``kv_block_bytes``/``kv_pool_blocks``) so the deploy decision can
+    read live-KV HBM at any target occupancy, not just the worst case.
+    """
+    from repro.serve.kvcache import (abstract_decode_cache,
+                                     abstract_paged_cache,
+                                     decode_cache_nbytes, kv_block_size,
+                                     kv_pool_block_bytes)
+    from repro.serve.serve_step import (make_paged_decode_step,
+                                        make_slot_decode_step)
+
+    paged = pool_blocks is not None
+    step = (make_paged_decode_step(cfg, rules=rules, mesh=mesh,
+                                   policy=policy) if paged
+            else make_slot_decode_step(cfg, rules=rules, mesh=mesh,
+                                       policy=policy))
     params_abs = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype),
         params)
-    cache_abs = abstract_decode_cache(cfg, slots, capacity, policy)
     vec = jax.ShapeDtypeStruct((slots,), jnp.int32)
     suffix = ""
     if policy is not None and policy.weights == "int8":
         suffix = "-int8"
-    art = compile_fn(step, params_abs, cache_abs, vec, vec, vec,
-                     name=f"{cfg.name}-decode-b{slots}-s{capacity}{suffix}")
+    if paged:
+        bs = block_size or kv_block_size(capacity)
+        cache_abs = abstract_paged_cache(cfg, slots, capacity,
+                                         pool_blocks, policy, bs)
+        table = jax.ShapeDtypeStruct((slots, capacity // bs), jnp.int32)
+        art = compile_fn(
+            step, params_abs, cache_abs, vec, vec, vec, table,
+            name=f"{cfg.name}-decode-b{slots}-s{capacity}"
+                 f"-paged{pool_blocks}x{bs}{suffix}")
+        art.memory["kv_block_bytes"] = kv_pool_block_bytes(cfg, capacity,
+                                                           policy, bs)
+        art.memory["kv_pool_blocks"] = pool_blocks
+    else:
+        cache_abs = abstract_decode_cache(cfg, slots, capacity, policy)
+        art = compile_fn(
+            step, params_abs, cache_abs, vec, vec, vec,
+            name=f"{cfg.name}-decode-b{slots}-s{capacity}{suffix}")
     art.memory["kv_cache_bytes"] = decode_cache_nbytes(cache_abs)
     art.memory["kv_cache_bytes_float"] = (
         art.memory["kv_cache_bytes"] if suffix == ""
         else decode_cache_nbytes(
-            abstract_decode_cache(cfg, slots, capacity, None)))
+            abstract_paged_cache(cfg, slots, capacity, pool_blocks, None,
+                                 block_size)
+            if paged else abstract_decode_cache(cfg, slots, capacity,
+                                                None)))
     art.memory["param_bytes"] = decode_cache_nbytes(params_abs)
     return art
 

@@ -36,6 +36,15 @@ admission: the q tile carries the whole chunk's grouped query rows
 across the chunk is pure position masking — the chunk's KV is already
 in the cache), and the kv_len bounding / in-tile Int8KV dequant are
 shared with the decode kernel.
+
+Both kernels additionally speak the **paged pool** layout
+(docs/paged_kv.md): with a ``block_table`` (B, n_blocks) scalar-prefetch
+operand, k/v become an (NB, BS, Hkv, D) pool of fixed-size blocks and
+the grid's KV-block index resolves through the slot's table row inside
+the index maps — the DMA stream touches exactly the slot's blocks, the
+kv_len clamp/skip logic is unchanged, and ``kv_block_size`` (the tile
+helper shared with serve/kvcache.py) guarantees pool block == kernel
+block.
 """
 from __future__ import annotations
 
@@ -50,8 +59,26 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(qp_ref, kl_ref, q_ref, k_ref, v_ref, pos_ref, *rest,
-            scale: float, bk: int, n_k: int, window: int, int8: bool):
+def kv_block_size(capacity: int, block_k: int = 128) -> int:
+    """KV block granularity at a given per-slot capacity: the flash
+    kernels' tile choice — min(block_k, capacity), halved until it
+    divides capacity cleanly (floored at 8).  This is the single source
+    of truth shared by the kernels, the serving engines' capacity
+    rounding, and the paged ``BlockManager``'s physical block size (the
+    paged pool's block == the kernel's KV grid block, so the block-table
+    index map needs no sub-block arithmetic)."""
+    bk = min(block_k, max(int(capacity), 1))
+    while capacity % bk and bk > 8:
+        bk //= 2
+    return bk
+
+
+def _kernel(qp_ref, kl_ref, *refs,
+            scale: float, bk: int, n_k: int, window: int, int8: bool,
+            paged: bool):
+    if paged:
+        _tbl_ref, *refs = refs          # consumed by the index maps only
+    q_ref, k_ref, v_ref, pos_ref, *rest = refs
     if int8:
         ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
     else:
@@ -121,37 +148,58 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
                  q_pos: jax.Array, cache_pos: jax.Array, kv_len: jax.Array,
                  *, k_scale: Optional[jax.Array] = None,
                  v_scale: Optional[jax.Array] = None,
+                 block_table: Optional[jax.Array] = None,
                  window: int = 0, block_k: int = 128,
                  interpret: bool = False) -> jax.Array:
-    """q: (B, Hkv, G, D) grouped queries; k/v: (B, S, Hkv, D) float — or
-    int8 with ``k_scale``/``v_scale`` (B, S, Hkv) f32 per-(entry, head)
-    scales.  q_pos: (B,) absolute query positions; cache_pos: (B, S)
-    stored positions (−1 invalid); kv_len: (B,) per-slot high-water mark
-    (use S for "scan everything").  Returns (B, Hkv, G, D) in q.dtype.
+    """q: (B, Hkv, G, D) grouped queries.
+
+    Contiguous (slot-rectangle) layout — ``block_table is None``:
+    k/v: (B, S, Hkv, D) float — or int8 with ``k_scale``/``v_scale``
+    (B, S, Hkv) f32 per-(entry, head) scales.  q_pos: (B,) absolute
+    query positions; cache_pos: (B, S) stored positions (−1 invalid);
+    kv_len: (B,) per-slot high-water mark (use S for "scan everything").
+
+    Paged layout — ``block_table`` (B, n_blocks) int32: k/v are a global
+    *pool* (NB, BS, Hkv, D) of fixed-size KV blocks (scales (NB, BS,
+    Hkv); cache_pos (NB, BS)); slot ``b``'s logical KV block ``j`` lives
+    in physical block ``block_table[b, j]``.  The grid's KV-block index
+    resolves through the table inside the index maps, so the pipeline
+    DMAs exactly the slot's blocks — there is no per-slot capacity
+    rectangle in HBM at all.  Entries of the table beyond the slot's
+    live region must still hold a *valid* physical block id (0 is fine):
+    the kv_len clamp re-maps dead grid steps onto the last live block
+    and predicates their compute off, exactly as in the contiguous
+    layout.  ``kv_len`` remains the *logical* per-slot fill.
+
+    Returns (B, Hkv, G, D) in q.dtype.
 
     Callers should size S to a multiple of the KV block (the servers
     round capacity up) — ragged S first shrinks the block (halving down
-    to 8) and only then pads, which costs a cache copy per call.
+    to 8) and only then pads, which costs a cache copy per call.  In the
+    paged layout the kernel block IS the pool block (``kv_block_size``),
+    so no shrink/pad path exists.
     """
     b, hkv, g, d = q.shape
-    s = k.shape[1]
-    # prefer a block that divides S (halving down to 8) over padding —
-    # padding copies the cache once per call
-    bk = min(block_k, s)
-    while s % bk and bk > 8:
-        bk //= 2
-    pad = (-s) % bk
-    if pad:
-        k = _pad_seq(k, pad, 1)
-        v = _pad_seq(v, pad, 1)
-        k_scale = _pad_seq(k_scale, pad, 1)
-        v_scale = _pad_seq(v_scale, pad, 1)
-        cache_pos = _pad_seq(cache_pos, pad, 1, value=-1)
-    n_k = (s + pad) // bk
+    paged = block_table is not None
+    if paged:
+        # pool block == kernel KV block by construction (kv_block_size)
+        bk = k.shape[1]
+        n_k = block_table.shape[1]
+        pad = 0
+    else:
+        s = k.shape[1]
+        # prefer a block that divides S (halving down to 8) over padding —
+        # padding copies the cache once per call
+        bk = kv_block_size(s, block_k)
+        pad = (-s) % bk
+        if pad:
+            k = _pad_seq(k, pad, 1)
+            v = _pad_seq(v, pad, 1)
+            k_scale = _pad_seq(k_scale, pad, 1)
+            v_scale = _pad_seq(v_scale, pad, 1)
+            cache_pos = _pad_seq(cache_pos, pad, 1, value=-1)
+        n_k = (s + pad) // bk
     int8 = k_scale is not None
-
-    def q_index(bi, hi, ki, qp, kl):
-        return (bi, hi, 0, 0)
 
     def _clamp(bi, ki, kl):
         # Dead blocks re-map to the last live one: an unchanged block
@@ -159,14 +207,30 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
         last_live = jnp.maximum(pl.cdiv(kl[bi], bk) - 1, 0)
         return jnp.minimum(ki, last_live)
 
-    def kv_index(bi, hi, ki, qp, kl):
-        return (bi, _clamp(bi, ki, kl), hi, 0)
+    if paged:
+        def q_index(bi, hi, ki, qp, kl, tbl):
+            return (bi, hi, 0, 0)
 
-    def pos_index(bi, hi, ki, qp, kl):
-        return (bi, _clamp(bi, ki, kl))
+        def kv_index(bi, hi, ki, qp, kl, tbl):
+            return (tbl[bi, _clamp(bi, ki, kl)], 0, hi, 0)
 
-    def scale_index(bi, hi, ki, qp, kl):
-        return (bi, _clamp(bi, ki, kl), hi)
+        def pos_index(bi, hi, ki, qp, kl, tbl):
+            return (tbl[bi, _clamp(bi, ki, kl)], 0)
+
+        def scale_index(bi, hi, ki, qp, kl, tbl):
+            return (tbl[bi, _clamp(bi, ki, kl)], 0, hi)
+    else:
+        def q_index(bi, hi, ki, qp, kl):
+            return (bi, hi, 0, 0)
+
+        def kv_index(bi, hi, ki, qp, kl):
+            return (bi, _clamp(bi, ki, kl), hi, 0)
+
+        def pos_index(bi, hi, ki, qp, kl):
+            return (bi, _clamp(bi, ki, kl))
+
+        def scale_index(bi, hi, ki, qp, kl):
+            return (bi, _clamp(bi, ki, kl), hi)
 
     in_specs = [
         pl.BlockSpec((1, 1, g, d), q_index),
@@ -180,8 +244,11 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
                      pl.BlockSpec((1, bk, 1), scale_index)]
         operands += [k_scale, v_scale]
 
+    prefetch = [q_pos.astype(jnp.int32), kv_len.astype(jnp.int32)]
+    if paged:
+        prefetch.append(block_table.astype(jnp.int32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=len(prefetch),
         grid=(b, hkv, n_k),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, d), q_index),
@@ -191,20 +258,25 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((g, d), jnp.float32),     # output accumulator
         ])
     kernel = functools.partial(
-        _kernel, scale=d ** -0.5, bk=bk, n_k=n_k, window=window, int8=int8)
+        _kernel, scale=d ** -0.5, bk=bk, n_k=n_k, window=window, int8=int8,
+        paged=paged)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
         interpret=interpret,
-    )(q_pos.astype(jnp.int32), kv_len.astype(jnp.int32), *operands)
+    )(*prefetch, *operands)
 
 
 # ---------------------------------------------------------------------------
 # Chunk-prefill attention (C queries per slot, cache-resident KV)
 # ---------------------------------------------------------------------------
-def _chunk_kernel(kl_ref, qp_ref, q_ref, k_ref, v_ref, pos_ref, *rest,
-                  scale: float, bk: int, n_k: int, window: int, int8: bool):
+def _chunk_kernel(kl_ref, *refs,
+                  scale: float, bk: int, n_k: int, window: int, int8: bool,
+                  paged: bool):
+    if paged:
+        _tbl_ref, *refs = refs          # consumed by the index maps only
+    qp_ref, q_ref, k_ref, v_ref, pos_ref, *rest = refs
     if int8:
         ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
     else:
@@ -264,6 +336,7 @@ def flash_chunk_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
                         kv_len: jax.Array,
                         *, k_scale: Optional[jax.Array] = None,
                         v_scale: Optional[jax.Array] = None,
+                        block_table: Optional[jax.Array] = None,
                         window: int = 0, block_k: int = 128,
                         interpret: bool = False) -> jax.Array:
     """q: (B, Hkv, R, D) grouped chunk queries — R = C·G rows ordered
@@ -275,43 +348,67 @@ def flash_chunk_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
     bounding the KV sweep (use S for "scan everything").  Returns
     (B, Hkv, R, D) in q.dtype.
 
+    ``block_table`` (B, n_blocks) int32 switches to the paged-pool
+    layout exactly as in ``flash_decode``: k/v (NB, BS, Hkv, D), scales
+    (NB, BS, Hkv), cache_pos (NB, BS), and the KV-block grid index
+    resolves through the slot's table row inside the index maps.
+
     The chunk's own KV must already be resident in the cache (written at
     its rows, or concatenated for ring layouts): in-chunk causality is
     decided purely by ``pos <= q_pos``, identical to the decode kernel.
     """
     b, hkv, r, d = q.shape
-    s = k.shape[1]
-    bk = min(block_k, s)
-    while s % bk and bk > 8:
-        bk //= 2
-    pad = (-s) % bk
-    if pad:
-        k = _pad_seq(k, pad, 1)
-        v = _pad_seq(v, pad, 1)
-        k_scale = _pad_seq(k_scale, pad, 1)
-        v_scale = _pad_seq(v_scale, pad, 1)
-        cache_pos = _pad_seq(cache_pos, pad, 1, value=-1)
-    n_k = (s + pad) // bk
+    paged = block_table is not None
+    if paged:
+        bk = k.shape[1]
+        n_k = block_table.shape[1]
+    else:
+        s = k.shape[1]
+        bk = kv_block_size(s, block_k)
+        pad = (-s) % bk
+        if pad:
+            k = _pad_seq(k, pad, 1)
+            v = _pad_seq(v, pad, 1)
+            k_scale = _pad_seq(k_scale, pad, 1)
+            v_scale = _pad_seq(v_scale, pad, 1)
+            cache_pos = _pad_seq(cache_pos, pad, 1, value=-1)
+        n_k = (s + pad) // bk
     int8 = k_scale is not None
-
-    def q_index(bi, hi, ki, kl):
-        return (bi, hi, 0, 0)
-
-    def qp_index(bi, hi, ki, kl):
-        return (bi, 0)
 
     def _clamp(bi, ki, kl):
         last_live = jnp.maximum(pl.cdiv(kl[bi], bk) - 1, 0)
         return jnp.minimum(ki, last_live)
 
-    def kv_index(bi, hi, ki, kl):
-        return (bi, _clamp(bi, ki, kl), hi, 0)
+    if paged:
+        def q_index(bi, hi, ki, kl, tbl):
+            return (bi, hi, 0, 0)
 
-    def pos_index(bi, hi, ki, kl):
-        return (bi, _clamp(bi, ki, kl))
+        def qp_index(bi, hi, ki, kl, tbl):
+            return (bi, 0)
 
-    def scale_index(bi, hi, ki, kl):
-        return (bi, _clamp(bi, ki, kl), hi)
+        def kv_index(bi, hi, ki, kl, tbl):
+            return (tbl[bi, _clamp(bi, ki, kl)], 0, hi, 0)
+
+        def pos_index(bi, hi, ki, kl, tbl):
+            return (tbl[bi, _clamp(bi, ki, kl)], 0)
+
+        def scale_index(bi, hi, ki, kl, tbl):
+            return (tbl[bi, _clamp(bi, ki, kl)], 0, hi)
+    else:
+        def q_index(bi, hi, ki, kl):
+            return (bi, hi, 0, 0)
+
+        def qp_index(bi, hi, ki, kl):
+            return (bi, 0)
+
+        def kv_index(bi, hi, ki, kl):
+            return (bi, _clamp(bi, ki, kl), hi, 0)
+
+        def pos_index(bi, hi, ki, kl):
+            return (bi, _clamp(bi, ki, kl))
+
+        def scale_index(bi, hi, ki, kl):
+            return (bi, _clamp(bi, ki, kl), hi)
 
     in_specs = [
         pl.BlockSpec((1, r), qp_index),
@@ -326,8 +423,11 @@ def flash_chunk_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
                      pl.BlockSpec((1, bk, 1), scale_index)]
         operands += [k_scale, v_scale]
 
+    prefetch = [kv_len.astype(jnp.int32)]
+    if paged:
+        prefetch.append(block_table.astype(jnp.int32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=len(prefetch),
         grid=(b, hkv, n_k),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, r, d), q_index),
@@ -338,10 +438,10 @@ def flash_chunk_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
         ])
     kernel = functools.partial(
         _chunk_kernel, scale=d ** -0.5, bk=bk, n_k=n_k, window=window,
-        int8=int8)
+        int8=int8, paged=paged)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, r, d), q.dtype),
         interpret=interpret,
-    )(kv_len.astype(jnp.int32), *operands)
+    )(*prefetch, *operands)

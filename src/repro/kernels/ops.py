@@ -110,6 +110,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 def decode_attention(q, k_cache, v_cache, q_position, cache_positions, *,
                      window: int = 0,
                      kv_len: Optional[jax.Array] = None,
+                     block_table: Optional[jax.Array] = None,
                      force: Optional[str] = None) -> jax.Array:
     """One-token decode attention against a slot-addressed KV cache.
 
@@ -123,6 +124,15 @@ def decode_attention(q, k_cache, v_cache, q_position, cache_positions, *,
     worst case; typical slots fill a fraction of it).  ``None`` means no
     bound (scan the whole cache; masking alone decides validity).
 
+    ``block_table`` (B, n_blocks) int32 switches to the **paged pool**
+    layout (docs/paged_kv.md): caches are (NB, BS, Hkv, D) pools of
+    fixed-size blocks, ``cache_positions`` is (NB, BS), and logical KV
+    block ``j`` of slot ``b`` resolves to physical block
+    ``block_table[b, j]`` — inside the Pallas index maps on the kernel
+    paths, by an explicit gather through the same table in the ref
+    oracle.  ``kv_len`` is then mandatory (it is what fences a slot off
+    from the stale blocks its table tail names).
+
     Int8 caches are dequantized per tile — inside the Pallas VMEM tile
     on the kernel paths, per ``lax.scan`` block in the ref simulation —
     so decode never materializes a float copy of the cache.
@@ -133,7 +143,13 @@ def decode_attention(q, k_cache, v_cache, q_position, cache_positions, *,
         v, v_scale = v_cache.q, v_cache.scale
     else:
         k, v, k_scale, v_scale = k_cache, v_cache, None, None
+    if block_table is not None and kv_len is None:
+        raise ValueError("paged decode_attention requires kv_len")
     if path == "ref":
+        if block_table is not None:
+            return ref.paged_decode_attention_ref(
+                q, k, v, q_position, cache_positions, block_table,
+                kv_len, window=window, k_scale=k_scale, v_scale=v_scale)
         return ref.decode_attention_ref(
             q, k, v, q_position, cache_positions, window=window,
             kv_len=kv_len, k_scale=k_scale, v_scale=v_scale)
@@ -144,14 +160,15 @@ def decode_attention(q, k_cache, v_cache, q_position, cache_positions, *,
     out = fd.flash_decode(
         q.reshape(b, hkv, hq // hkv, d), k, v,
         q_position.astype(jnp.int32), cache_positions, kv_len,
-        k_scale=k_scale, v_scale=v_scale, window=window,
-        interpret=(path == "interpret"))
+        k_scale=k_scale, v_scale=v_scale, block_table=block_table,
+        window=window, interpret=(path == "interpret"))
     return out.reshape(b, 1, hq, d)
 
 
 def chunk_attention(q, k_cache, v_cache, q_positions, cache_positions, *,
                     window: int = 0,
                     kv_len: Optional[jax.Array] = None,
+                    block_table: Optional[jax.Array] = None,
                     force: Optional[str] = None) -> jax.Array:
     """Chunk-prefill attention: C query tokens per slot against the
     slot-addressed KV cache (the admission path of chunked pad-free
@@ -166,6 +183,10 @@ def chunk_attention(q, k_cache, v_cache, q_positions, cache_positions, *,
     rows, or concatenated for ring layouts) — in-chunk causality is pure
     position masking.  ``kv_len`` (B,) is the post-write fill ``p + C``:
     blocks past it are skipped by the kernel exactly as in decode.
+
+    ``block_table`` (B, n_blocks) selects the paged-pool layout exactly
+    as in ``decode_attention`` (pool caches, table-resolved index maps /
+    ref gather, mandatory ``kv_len``).
     """
     path = resolve_path(force)
     if isinstance(k_cache, Int8KV):
@@ -173,7 +194,13 @@ def chunk_attention(q, k_cache, v_cache, q_positions, cache_positions, *,
         v, v_scale = v_cache.q, v_cache.scale
     else:
         k, v, k_scale, v_scale = k_cache, v_cache, None, None
+    if block_table is not None and kv_len is None:
+        raise ValueError("paged chunk_attention requires kv_len")
     if path == "ref":
+        if block_table is not None:
+            return ref.paged_chunk_attention_ref(
+                q, k, v, q_positions, cache_positions, block_table,
+                kv_len, window=window, k_scale=k_scale, v_scale=v_scale)
         return ref.chunk_attention_ref(
             q, k, v, q_positions, cache_positions, window=window,
             kv_len=kv_len, k_scale=k_scale, v_scale=v_scale)
@@ -189,8 +216,8 @@ def chunk_attention(q, k_cache, v_cache, q_positions, cache_positions, *,
                                (b, c, g)).reshape(b, c * g)
     out = fd.flash_chunk_prefill(
         qg, k, v, qp_rows.astype(jnp.int32), cache_positions, kv_len,
-        k_scale=k_scale, v_scale=v_scale, window=window,
-        interpret=(path == "interpret"))
+        k_scale=k_scale, v_scale=v_scale, block_table=block_table,
+        window=window, interpret=(path == "interpret"))
     return out.reshape(b, hkv, c, g, d).transpose(0, 2, 1, 3, 4) \
         .reshape(b, c, hq, d)
 

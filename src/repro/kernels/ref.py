@@ -187,6 +187,69 @@ def chunk_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# paged KV pool (block-table indirection, serving tier)
+# ---------------------------------------------------------------------------
+def gather_kv_pages(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Materialize a slot-contiguous view of a paged KV pool.
+
+    pool: (NB, BS, ...) — NB physical blocks of BS entries each;
+    block_table: (B, n) int32 — slot ``b``'s logical block ``j`` lives
+    in physical block ``block_table[b, j]``.  Returns (B, n · BS, ...):
+    logical entry ``i`` of slot ``b`` is ``pool[table[b, i // BS],
+    i % BS]``.
+
+    This is the *same* indirection the Pallas kernels' index maps
+    perform one block at a time — the oracle gathers through the
+    identical table, so kernel-vs-ref parity pins the paged addressing,
+    not just the softmax math.  Entries past a slot's ``kv_len`` come
+    from whatever block the table names there (0 by convention); they
+    must be masked by the caller's ``kv_len`` bound exactly as in the
+    kernel.
+    """
+    b, n = block_table.shape
+    pages = pool[block_table]                    # (B, n, BS, ...)
+    return pages.reshape((b, n * pool.shape[1]) + pool.shape[2:])
+
+
+def paged_chunk_attention_ref(q: jax.Array, k_pool: jax.Array,
+                              v_pool: jax.Array, q_positions: jax.Array,
+                              pool_positions: jax.Array,
+                              block_table: jax.Array,
+                              kv_len: jax.Array, *, window: int = 0,
+                              k_scale: Optional[jax.Array] = None,
+                              v_scale: Optional[jax.Array] = None
+                              ) -> jax.Array:
+    """``chunk_attention_ref`` over a paged pool: gather each operand
+    through the block table, then delegate.  ``kv_len`` is mandatory —
+    in the paged layout it is the only thing standing between a slot
+    and the stale/foreign entries of the blocks its table tail names."""
+    k = gather_kv_pages(k_pool, block_table)
+    v = gather_kv_pages(v_pool, block_table)
+    cache_positions = gather_kv_pages(pool_positions, block_table)
+    if k_scale is not None:
+        k_scale = gather_kv_pages(k_scale, block_table)
+        v_scale = gather_kv_pages(v_scale, block_table)
+    return chunk_attention_ref(
+        q, k, v, q_positions, cache_positions, window=window,
+        kv_len=kv_len, k_scale=k_scale, v_scale=v_scale)
+
+
+def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, q_position: jax.Array,
+                               pool_positions: jax.Array,
+                               block_table: jax.Array,
+                               kv_len: jax.Array, *, window: int = 0,
+                               k_scale: Optional[jax.Array] = None,
+                               v_scale: Optional[jax.Array] = None
+                               ) -> jax.Array:
+    """Decode (C == 1) case of ``paged_chunk_attention_ref``."""
+    return paged_chunk_attention_ref(
+        q, k_pool, v_pool, q_position[:, None], pool_positions,
+        block_table, kv_len, window=window, k_scale=k_scale,
+        v_scale=v_scale)
+
+
+# ---------------------------------------------------------------------------
 # chunked selective scan (mamba1-style diagonal SSM)
 # ---------------------------------------------------------------------------
 def mamba_scan_ref(x: jax.Array, dt: jax.Array, b_mat: jax.Array,

@@ -3,8 +3,11 @@
 Runs the continuous-batching server over synthetic prompts on the
 selected arch (smoke config on CPU; same code takes the full config on
 a pod).  ``--engine static`` selects the static-batching baseline,
-``--artifact`` runs the decode hot loop from an AOT ``CompiledArtifact``
-(paper C4: serve the deployed executable).
+``--engine paged`` the paged-KV-pool engine (block tables, prefix
+sharing, preempt-and-recompute — docs/paged_kv.md; ``--pool-blocks``
+sizes the pool below the contiguous rectangle), ``--artifact`` runs the
+decode hot loop from an AOT ``CompiledArtifact`` (paper C4: serve the
+deployed executable).
 """
 from __future__ import annotations
 
@@ -16,14 +19,18 @@ import numpy as np
 
 from repro import configs
 from repro.models.params import init_params
-from repro.serve.server import ContinuousBatchServer, StaticBatchServer
+from repro.serve.server import (ContinuousBatchServer, PagedBatchServer,
+                                StaticBatchServer)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
-    ap.add_argument("--engine", choices=("continuous", "static"),
+    ap.add_argument("--engine", choices=("continuous", "static", "paged"),
                     default="continuous")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="paged engine: physical KV blocks in the pool"
+                         " (default: the contiguous rectangle's count)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -48,6 +55,12 @@ def main() -> None:
                                    prefill_chunk=args.prefill_chunk,
                                    max_new_tokens=args.max_new,
                                    precision=args.precision)
+    elif args.engine == "paged":
+        server = PagedBatchServer(
+            cfg, params, slots=args.slots, max_prompt=args.prompt_len,
+            prefill_chunk=args.prefill_chunk,
+            max_new_tokens=args.max_new, use_artifact=args.artifact,
+            pool_blocks=args.pool_blocks, precision=args.precision)
     else:
         server = ContinuousBatchServer(
             cfg, params, slots=args.slots, max_prompt=args.prompt_len,

@@ -133,11 +133,17 @@ def forward_prefill(cfg: ArchConfig, params, inputs: Dict[str, jax.Array],
 def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
                    position: jax.Array, write_idx=None,
                    policy: Optional[PrecisionPolicy] = None,
-                   kv_len=None):
+                   kv_len=None, block_table=None):
     """``kv_len`` bounds the decoder self-attn cache rows (serving
     contract, see transformer.forward_decode; ``kv_len == 0`` rows also
     suppress their cache writes); cross-attn KV is the fixed-length
-    encoder output and is never bounded."""
+    encoder output and is never bounded.
+
+    ``block_table`` is accepted for ``ModelFns`` signature parity but
+    enc-dec caches are not paged (the serving engines reject enc-dec
+    archs at construction — a modality runner owns the encoder pass)."""
+    if block_table is not None:
+        raise NotImplementedError("enc-dec decode caches are not paged")
     params = maybe_cast_params(params, cfg)
     x = embed_tokens(params, token[:, None], cfg)
     widx = position if write_idx is None else write_idx
@@ -211,12 +217,16 @@ def init_chunk_cache(cfg: ArchConfig, params, enc_embeddings: jax.Array,
 def forward_prefill_chunk(cfg: ArchConfig, params, cache,
                           tokens: jax.Array, positions: jax.Array,
                           policy: Optional[PrecisionPolicy] = None,
-                          kv_len=None):
+                          kv_len=None, block_table=None):
     """One decoder prefill chunk against a live cache built by
     ``init_chunk_cache`` (see transformer.forward_prefill_chunk for the
     chunk contract): self-attention writes the chunk unpadded and
     attends the live prefix; cross-attention reads the fixed encoder KV.
+    ``block_table`` is signature parity only — enc-dec caches are not
+    paged (see ``forward_decode``).
     """
+    if block_table is not None:
+        raise NotImplementedError("enc-dec decode caches are not paged")
     params = maybe_cast_params(params, cfg)
     x = embed_tokens(params, tokens, cfg)
     write_full = positions[:, 0]

@@ -332,7 +332,8 @@ def attention_decode_layer(p: dict, x: jax.Array, position: jax.Array,
                            cross: bool = False,
                            policy: Optional[PrecisionPolicy] = None,
                            kv_len: Optional[jax.Array] = None,
-                           active: Optional[jax.Array] = None):
+                           active: Optional[jax.Array] = None,
+                           block_table: Optional[jax.Array] = None):
     """One decode step.  x: (B, 1, d); position: (B,) absolute position;
     write_idx: (B,) slot to write KV into (ring index for sliding caches).
 
@@ -354,6 +355,16 @@ def attention_decode_layer(p: dict, x: jax.Array, position: jax.Array,
     prefill) write their *existing* entry back, so a decode step can
     never scribble into a row another phase owns.  ``None`` writes
     unconditionally (single-sequence decode).
+
+    ``block_table`` (B, n_blocks) switches to the **paged pool** layout
+    (docs/paged_kv.md): ``cache_k``/``cache_v`` are (NB, BS, Hkv, D)
+    pools (Int8KV scales (NB, BS, Hkv)), ``cache_positions`` is the
+    (NB, BS) position pool, and this token's KV scatters into physical
+    row ``(block_table[b, position // BS], position % BS)`` — inactive
+    rows are routed out of bounds and dropped.  The scheduler owns the
+    invariant that a written block has refcount 1 (prefix-shared blocks
+    are never write targets), so the scatter targets are unique.  Only
+    full (non-ring) self-attention caches are ever paged.
 
     Returns (out, new_cache_k, new_cache_v, new_cache_positions).
     """
@@ -380,18 +391,34 @@ def attention_decode_layer(p: dict, x: jax.Array, position: jax.Array,
         q = apply_rope(q, position[:, None], rope_theta)
         k = apply_rope(k, position[:, None], rope_theta)
 
-    def upd(cache, new):
-        if active is None:
-            return jax.vmap(
-                lambda c, n, i: lax.dynamic_update_slice_in_dim(c, n, i,
-                                                                axis=0)
-            )(cache, new, write_idx)
+    if block_table is not None:
+        # Paged pool: this token's row lives at (table[b, pos // BS],
+        # pos % BS).  Inactive rows scatter out of bounds → dropped.
+        nb, bs = cache_positions.shape
+        blk = jnp.take_along_axis(
+            block_table, (write_idx // bs)[:, None], axis=1)[:, 0]
+        off = write_idx % bs
+        if active is not None:
+            blk = jnp.where(active, blk, nb)
 
-        def one(c, n, i, a):
-            old = lax.dynamic_slice_in_dim(c, i, n.shape[0], axis=0)
-            return lax.dynamic_update_slice_in_dim(
-                c, jnp.where(a, n, old), i, axis=0)
-        return jax.vmap(one)(cache, new, write_idx, active)
+        def upd(cache, new):
+            # new: (B, 1, ...) — one row per slot, unique (blk, off)
+            # targets by the refcount-1 write invariant
+            return cache.at[blk, off].set(new[:, 0].astype(cache.dtype),
+                                          mode="drop")
+    else:
+        def upd(cache, new):
+            if active is None:
+                return jax.vmap(
+                    lambda c, n, i: lax.dynamic_update_slice_in_dim(
+                        c, n, i, axis=0)
+                )(cache, new, write_idx)
+
+            def one(c, n, i, a):
+                old = lax.dynamic_slice_in_dim(c, i, n.shape[0], axis=0)
+                return lax.dynamic_update_slice_in_dim(
+                    c, jnp.where(a, n, old), i, axis=0)
+            return jax.vmap(one)(cache, new, write_idx, active)
 
     if isinstance(cache_k, Int8KV):
         qk, qv = quant_kv(k), quant_kv(v)
@@ -418,7 +445,8 @@ def attention_decode_layer(p: dict, x: jax.Array, position: jax.Array,
     else:
         bound = kv_len
     o = decode_attention(q, cache_k, cache_v, position,
-                         cache_positions, window=window, kv_len=bound)
+                         cache_positions, window=window, kv_len=bound,
+                         block_table=block_table)
     out = quant_matmul(o.reshape(b, 1, n_heads * head_dim), p["wo"],
                        policy=policy)
     return out, cache_k, cache_v, cache_positions
@@ -457,7 +485,8 @@ def attention_chunk_layer(p: dict, x: jax.Array, positions: jax.Array,
                           mrope_sections, window: int = 0,
                           cross: bool = False,
                           policy: Optional[PrecisionPolicy] = None,
-                          kv_len: Optional[jax.Array] = None):
+                          kv_len: Optional[jax.Array] = None,
+                          block_table: Optional[jax.Array] = None):
     """One chunk-prefill step: C tokens written unpadded into the slot's
     cache rows, attending over the slot's live KV prefix plus themselves.
 
@@ -479,6 +508,13 @@ def attention_chunk_layer(p: dict, x: jax.Array, positions: jax.Array,
     Int8KV caches quantize the chunk per (entry, head) before the write/
     concat — the fake-quant policy mirrors the round-trip in float, which
     is what keeps int8 chunked serving testable token-exact.
+
+    ``block_table`` (B, n_blocks) switches the ``window == 0`` path to
+    the paged-pool layout (docs/paged_kv.md): the chunk's C rows scatter
+    into physical rows ``(table[b, (p + i) // BS], (p + i) % BS)`` —
+    pad-tail rows included, stamped position −1, so a recycled block can
+    never leak a stale position inside the post-write fill — and the
+    attention resolves through the same table in the kernel index maps.
 
     Returns (out (B, C, d), new_cache_k, new_cache_v, new_cache_positions).
     """
@@ -546,11 +582,27 @@ def attention_chunk_layer(p: dict, x: jax.Array, positions: jax.Array,
             cache_v = _ring_scatter(cache_v, v, idx)
         cache_positions = _ring_scatter(cache_positions, positions, idx)
     else:
-        def upd(cache, new):
-            return jax.vmap(
-                lambda cc, n, i: lax.dynamic_update_slice_in_dim(
-                    cc, n.astype(cc.dtype), i, axis=0)
-            )(cache, new, write_idx)
+        if block_table is not None:
+            # Paged pool: row p + i of the chunk scatters into physical
+            # (table[b, (p+i) // BS], (p+i) % BS).  Pad-tail rows write
+            # too (their position stamp is −1), so no stale tenant
+            # position survives inside the post-write fill p + C.
+            bs = cache_positions.shape[1]
+            tgt = write_idx[:, None] + jnp.arange(c, dtype=jnp.int32)[None]
+            blk = jnp.take_along_axis(block_table, tgt // bs, axis=1)
+            off = tgt % bs
+
+            def upd(cache, new):
+                # (B, C) index pairs — unique targets per refcount-1
+                # write invariant (shared prefix blocks are skipped by
+                # the scheduler, never written)
+                return cache.at[blk, off].set(new.astype(cache.dtype))
+        else:
+            def upd(cache, new):
+                return jax.vmap(
+                    lambda cc, n, i: lax.dynamic_update_slice_in_dim(
+                        cc, n.astype(cc.dtype), i, axis=0)
+                )(cache, new, write_idx)
 
         if isinstance(cache_k, Int8KV):
             qk, qv = quant_kv(k), quant_kv(v)
@@ -564,8 +616,11 @@ def attention_chunk_layer(p: dict, x: jax.Array, positions: jax.Array,
         cache_positions = upd(cache_positions, positions)
         s_kv = cache_positions.shape[1]
         bound = None if kv_len is None else jnp.clip(kv_len, 0, s_kv)
+        if block_table is not None:
+            bound = kv_len
         o = chunk_attention(q, cache_k, cache_v, positions,
-                            cache_positions, kv_len=bound)
+                            cache_positions, kv_len=bound,
+                            block_table=block_table)
     cache_k = _constrain_decode_kv(cache_k)
     cache_v = _constrain_decode_kv(cache_v)
     out = quant_matmul(o.reshape(b, c, n_heads * head_dim), p["wo"],

@@ -153,12 +153,12 @@ def mamba_block(cfg: ArchConfig, p, x, state=None):
 
 def dense_block_decode(cfg: ArchConfig, p, x, position, cache_k, cache_v,
                        cache_pos, write_idx, *, window=0, policy=None,
-                       kv_len=None, active=None):
+                       kv_len=None, active=None, block_table=None):
     h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
     attn_out, ck, cv, cp = attention_decode_layer(
         p["attn"], h, position, cache_k, cache_v, cache_pos, write_idx,
         policy=policy, kv_len=kv_len, active=active,
-        **_attn_kwargs(cfg, window))
+        block_table=block_table, **_attn_kwargs(cfg, window))
     x = x + attn_out
     h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
     x = x + swiglu_mlp(p["mlp"], h, policy)
@@ -167,11 +167,12 @@ def dense_block_decode(cfg: ArchConfig, p, x, position, cache_k, cache_v,
 
 def moe_block_decode(cfg: ArchConfig, p, x, position, cache_k, cache_v,
                      cache_pos, write_idx, policy=None, kv_len=None,
-                     active=None):
+                     active=None, block_table=None):
     h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
     attn_out, ck, cv, cp = attention_decode_layer(
         p["attn"], h, position, cache_k, cache_v, cache_pos, write_idx,
-        policy=policy, kv_len=kv_len, active=active, **_attn_kwargs(cfg))
+        policy=policy, kv_len=kv_len, active=active,
+        block_table=block_table, **_attn_kwargs(cfg))
     x = x + attn_out
     h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
     x = x + moe_layer(p["moe"], h, cfg)
@@ -199,11 +200,12 @@ def mamba_block_decode(cfg: ArchConfig, p, x, state, active=None):
 # ---------------------------------------------------------------------------
 def dense_block_chunk(cfg: ArchConfig, p, x, positions, cache_k, cache_v,
                       cache_pos, write_idx, *, window=0, policy=None,
-                      kv_len=None):
+                      kv_len=None, block_table=None):
     h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
     attn_out, ck, cv, cp = attention_chunk_layer(
         p["attn"], h, positions, cache_k, cache_v, cache_pos, write_idx,
-        policy=policy, kv_len=kv_len, **_attn_kwargs(cfg, window))
+        policy=policy, kv_len=kv_len, block_table=block_table,
+        **_attn_kwargs(cfg, window))
     x = x + attn_out
     h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
     x = x + swiglu_mlp(p["mlp"], h, policy)
@@ -211,11 +213,13 @@ def dense_block_chunk(cfg: ArchConfig, p, x, positions, cache_k, cache_v,
 
 
 def moe_block_chunk(cfg: ArchConfig, p, x, positions, cache_k, cache_v,
-                    cache_pos, write_idx, policy=None, kv_len=None):
+                    cache_pos, write_idx, policy=None, kv_len=None,
+                    block_table=None):
     h = rms_norm(p["attn_norm"], x, cfg.norm_eps)
     attn_out, ck, cv, cp = attention_chunk_layer(
         p["attn"], h, positions, cache_k, cache_v, cache_pos, write_idx,
-        policy=policy, kv_len=kv_len, **_attn_kwargs(cfg))
+        policy=policy, kv_len=kv_len, block_table=block_table,
+        **_attn_kwargs(cfg))
     x = x + attn_out
     h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
     x = x + moe_layer(p["moe"], h, cfg)
@@ -327,7 +331,8 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
                  write_full, write_local,
                  policy: Optional[PrecisionPolicy] = None,
                  kv_len: Optional[jax.Array] = None,
-                 active: Optional[jax.Array] = None):
+                 active: Optional[jax.Array] = None,
+                 block_table: Optional[jax.Array] = None):
     """One-token pass through all blocks, updating the cache pytree.
 
     ``kv_len`` (B,) is the per-row high-water mark of the full-attention
@@ -336,9 +341,19 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
     ``position``.  ``active`` (B,) bool predicates every cache/state
     write — inactive rows (idle slots, slots mid-chunked-prefill) come
     through the step bit-identical.
+
+    ``block_table`` (B, n_blocks) marks the cache as **paged**: the
+    full-attention KV leaves are block pools addressed through the table
+    (positions in ``cache["pool_pos"]``), while sliding-window ring
+    caches and SSM state stay slot-addressed — they are O(window) /
+    O(state) per slot already, there is no capacity tail to reclaim
+    (docs/paged_kv.md).
     """
     pat = layer_pattern(cfg)
     new_cache = dict(cache)
+    # paged caches keep full-attention positions in the (NB, BS) pool
+    full_pos = cache["pool_pos" if block_table is not None else "full_pos"] \
+        if pat["kind"] != "uniform_ssm" else None
 
     if pat["kind"] in ("uniform_dense", "uniform_moe"):
         is_moe = pat["kind"] == "uniform_moe"
@@ -347,8 +362,9 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
             p, ck, cv = pc
             fn = moe_block_decode if is_moe else dense_block_decode
             h, ck, cv, cp = fn(cfg, p, h, position, ck, cv,
-                               cache["full_pos"], write_full, policy=policy,
-                               kv_len=kv_len, active=active)
+                               full_pos, write_full, policy=policy,
+                               kv_len=kv_len, active=active,
+                               block_table=block_table)
             return h, (ck, cv)
         x, (ks, vs) = lax.scan(body, x, (params["blocks"],
                                          cache["k"], cache["v"]))
@@ -380,8 +396,8 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
             h, (lks, lvs) = lax.scan(local_body, h, (p["local"], lk, lv))
             h, gk, gv, _ = dense_block_decode(
                 cfg, p["global"], h, position, gk, gv,
-                cache["full_pos"], write_full, policy=policy, kv_len=kv_len,
-                active=active)
+                full_pos, write_full, policy=policy, kv_len=kv_len,
+                active=active, block_table=block_table)
             return h, (lks, lvs, gk, gv)
 
         x, (lks, lvs, gks, gvs) = lax.scan(
@@ -412,8 +428,8 @@ def trunk_decode(cfg: ArchConfig, params, x, position, cache, *,
             h, states = lax.scan(mamba_body, h, (p, tuple(st)))
             h, ck, cv, _ = dense_block_decode(
                 cfg, shared, h, position, ck, cv,
-                cache["full_pos"], write_full, policy=policy, kv_len=kv_len,
-                active=active)
+                full_pos, write_full, policy=policy, kv_len=kv_len,
+                active=active, block_table=block_table)
             return h, (states, ck, cv)
 
         x, (states, ks, vs) = lax.scan(
@@ -490,7 +506,8 @@ def forward_prefill(cfg: ArchConfig, params, inputs: Dict[str, jax.Array],
 def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
                    position: jax.Array, write_idx: Optional[jax.Array] = None,
                    policy: Optional[PrecisionPolicy] = None,
-                   kv_len: Optional[jax.Array] = None):
+                   kv_len: Optional[jax.Array] = None,
+                   block_table: Optional[jax.Array] = None):
     """token: (B,) int32; position: (B,) absolute index of this token.
 
     ``write_idx`` (B,) is the cache slot row index to write KV into; it
@@ -508,6 +525,11 @@ def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
     cannot scribble into a row the scheduler has parked or is chunk-
     prefilling.  ``None`` scans (and writes) the whole cache — masking
     alone still guarantees correctness.
+
+    ``block_table`` (B, n_blocks) marks ``cache`` as a **paged** decode
+    cache (full-attention KV block pools + ``pool_pos``; ring/SSM leaves
+    slot-addressed as ever — see docs/paged_kv.md); ``kv_len`` is then
+    required and the write lands in the physical block the table names.
     """
     params = maybe_cast_params(params, cfg)
     x = embed_tokens(params, token[:, None], cfg)
@@ -518,10 +540,15 @@ def forward_decode(cfg: ArchConfig, params, cache, token: jax.Array,
     x, new_cache = trunk_decode(cfg, params, x, position, cache,
                                 write_full=write_full,
                                 write_local=write_local, policy=policy,
-                                kv_len=kv_len, active=active)
+                                kv_len=kv_len, active=active,
+                                block_table=block_table)
     logits = unembed(params, x, cfg)[:, 0]
     # position bookkeeping lives outside trunk_decode (shared across layers)
-    if "full_pos" in new_cache:
+    if "pool_pos" in new_cache:
+        new_cache["pool_pos"] = _write_pool_pos(
+            new_cache["pool_pos"], position[:, None], write_full,
+            block_table, active)
+    elif "full_pos" in new_cache:
         new_cache["full_pos"] = _write_pos(new_cache["full_pos"], position,
                                            write_full, active)
     if "local_pos" in new_cache:
@@ -553,13 +580,32 @@ def _write_pos_chunk(pos_arr, positions, idx):
     )(pos_arr, positions, idx)
 
 
+def _write_pool_pos(pool_pos, positions, write_idx, block_table,
+                    active=None):
+    """Paged sibling of ``_write_pos``/``_write_pos_chunk``: stamp (B, C)
+    positions into the (NB, BS) position pool at logical rows
+    ``[write_idx, write_idx + C)`` resolved through ``block_table``;
+    rows with ``active == False`` are routed out of bounds and dropped.
+    Pad entries (position −1) are stamped too — that is what keeps a
+    recycled physical block free of stale tenant positions inside the
+    post-write fill."""
+    nb, bs = pool_pos.shape
+    c = positions.shape[1]
+    tgt = write_idx[:, None] + jnp.arange(c, dtype=jnp.int32)[None]
+    blk = jnp.take_along_axis(block_table, tgt // bs, axis=1)
+    if active is not None:
+        blk = jnp.where(active[:, None], blk, nb)
+    return pool_pos.at[blk, tgt % bs].set(positions, mode="drop")
+
+
 # ---------------------------------------------------------------------------
 # Chunked pad-free prefill (serving admission path)
 # ---------------------------------------------------------------------------
 def trunk_prefill_chunk(cfg: ArchConfig, params, x, positions, cache, *,
                         write_full,
                         policy: Optional[PrecisionPolicy] = None,
-                        kv_len: Optional[jax.Array] = None):
+                        kv_len: Optional[jax.Array] = None,
+                        block_table: Optional[jax.Array] = None):
     """C-token pass through all blocks against the live slot cache.
 
     The chunk sibling of ``trunk_decode``: attention layers write the
@@ -568,11 +614,17 @@ def trunk_prefill_chunk(cfg: ArchConfig, params, x, positions, cache, *,
     prefix plus the chunk; SSM layers advance the carried recurrent
     state over exactly the chunk's real tokens (pad steps of a ragged
     final chunk are exact no-ops).
+
+    ``block_table`` (B, n_blocks) marks the cache as paged, exactly as
+    in ``trunk_decode`` (full-attention leaves are block pools, ring /
+    SSM leaves stay slot-addressed).
     """
     pat = layer_pattern(cfg)
     new_cache = dict(cache)
     mask = positions >= 0
     fill = mask.sum(axis=1).astype(jnp.int32)
+    full_pos = cache["pool_pos" if block_table is not None else "full_pos"] \
+        if pat["kind"] != "uniform_ssm" else None
 
     if pat["kind"] in ("uniform_dense", "uniform_moe"):
         is_moe = pat["kind"] == "uniform_moe"
@@ -581,8 +633,8 @@ def trunk_prefill_chunk(cfg: ArchConfig, params, x, positions, cache, *,
             p, ck, cv = pc
             fn = moe_block_chunk if is_moe else dense_block_chunk
             h, ck, cv, cp = fn(cfg, p, h, positions, ck, cv,
-                               cache["full_pos"], write_full, policy=policy,
-                               kv_len=kv_len)
+                               full_pos, write_full, policy=policy,
+                               kv_len=kv_len, block_table=block_table)
             return h, (ck, cv)
         x, (ks, vs) = lax.scan(body, x, (params["blocks"],
                                          cache["k"], cache["v"]))
@@ -613,7 +665,8 @@ def trunk_prefill_chunk(cfg: ArchConfig, params, x, positions, cache, *,
             h, (lks, lvs) = lax.scan(local_body, h, (p["local"], lk, lv))
             h, gk, gv, _ = dense_block_chunk(
                 cfg, p["global"], h, positions, gk, gv,
-                cache["full_pos"], write_full, policy=policy, kv_len=kv_len)
+                full_pos, write_full, policy=policy, kv_len=kv_len,
+                block_table=block_table)
             return h, (lks, lvs, gk, gv)
 
         x, (lks, lvs, gks, gvs) = lax.scan(
@@ -644,7 +697,8 @@ def trunk_prefill_chunk(cfg: ArchConfig, params, x, positions, cache, *,
             h, states = lax.scan(mamba_body, h, (p, tuple(st)))
             h, ck, cv, _ = dense_block_chunk(
                 cfg, shared, h, positions, ck, cv,
-                cache["full_pos"], write_full, policy=policy, kv_len=kv_len)
+                full_pos, write_full, policy=policy, kv_len=kv_len,
+                block_table=block_table)
             return h, (states, ck, cv)
 
         x, (states, ks, vs) = lax.scan(
@@ -663,7 +717,8 @@ def trunk_prefill_chunk(cfg: ArchConfig, params, x, positions, cache, *,
 def forward_prefill_chunk(cfg: ArchConfig, params, cache,
                           tokens: jax.Array, positions: jax.Array,
                           policy: Optional[PrecisionPolicy] = None,
-                          kv_len: Optional[jax.Array] = None):
+                          kv_len: Optional[jax.Array] = None,
+                          block_table: Optional[jax.Array] = None):
     """One fixed-size prefill chunk against a live slot cache.
 
     tokens: (B, C) int32; positions: (B, C) absolute positions — the
@@ -688,10 +743,14 @@ def forward_prefill_chunk(cfg: ArchConfig, params, cache,
     write_full = positions[:, 0]
     x, new_cache = trunk_prefill_chunk(cfg, params, x, positions, cache,
                                        write_full=write_full, policy=policy,
-                                       kv_len=kv_len)
+                                       kv_len=kv_len,
+                                       block_table=block_table)
     logits = unembed(params, x, cfg)
     # position bookkeeping outside the trunk (shared across layers)
-    if "full_pos" in new_cache:
+    if "pool_pos" in new_cache:
+        new_cache["pool_pos"] = _write_pool_pos(
+            new_cache["pool_pos"], positions, write_full, block_table)
+    elif "full_pos" in new_cache:
         new_cache["full_pos"] = _write_pos_chunk(new_cache["full_pos"],
                                                  positions, write_full)
     if "local_pos" in new_cache:

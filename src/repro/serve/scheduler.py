@@ -1,13 +1,18 @@
-"""Slot scheduler for the continuous-batching engine (paper §4.6).
+"""Slot scheduler for the continuous-batching engines (paper §4.6).
 
 The serving analogue of the EIM process runner's queue: requests wait in
-an FCFS queue; a fixed set of KV-cache *slots* (rows of the decode
-cache) is the unit of admission.  A slot's lifecycle is
+an FCFS queue; a fixed set of KV-cache *slots* is the unit of admission.
+A slot's lifecycle is
 
     FREE ──admit──▶ PREFILLING ──last chunk──▶ ACTIVE ──finish──▶ FREE
          (reset_slot)   (chunk steps,        (decode steps)  (release_slot)
-                         budgeted per
-                         decode step)
+                         budgeted per            │
+                         decode step)            │ pool dry (paged)
+                                                 ▼
+                                            PREEMPTED ──▶ back to queue
+                                            (blocks freed; re-admitted
+                                             FCFS-front and re-prefilled
+                                             over prompt ++ generated)
 
 Admission is cheap (host bookkeeping plus one device-side slot-row
 reset — no prefill compute): the prompt is then consumed in fixed-size
@@ -18,6 +23,16 @@ head-of-line-block the active slots' next tokens.  Slots are freed
 *between decode steps*, not at batch boundaries, so a short request
 never waits for the longest member of its batch — that is the whole
 difference between continuous and static batching.
+
+Under the **paged** engine the admission gate is the free-block
+watermark of the KV pool, not merely a free slot: a request is admitted
+only when the pool covers its prompt's blocks (minus any prefix-cached
+blocks it can share), and when the pool later runs dry mid-decode the
+*youngest* slot is PREEMPTED — its blocks freed, its request re-queued
+at the FCFS front carrying the tokens it already generated, to be
+re-prefilled over ``prompt ++ generated`` (preempt-and-recompute; greedy
+decoding makes the recompute token-exact).  ``Slot.blocks`` is the
+host-side block-table row backing all of this (docs/paged_kv.md).
 
 See docs/scheduling.md for the full lifecycle/budget contract.
 """
@@ -48,6 +63,11 @@ class Slot:
     position: int = 0              # absolute position of the next token
     generated: int = 0             # tokens emitted for this request
     max_new: int = 0
+    # paged engine only: physical KV block ids in logical order — the
+    # host mirror of this slot's block-table row (prefix-shared blocks,
+    # which carry extra refcounts, sit at the front; `chunk_pos` starts
+    # past them).
+    blocks: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def write_idx(self) -> int:
@@ -94,6 +114,7 @@ class Slot:
         self.chunk_pos = 0
         self.generated = 0
         self.max_new = 0
+        self.blocks = []
 
 
 class SlotScheduler:
@@ -123,6 +144,23 @@ class SlotScheduler:
                 break
             out.append((slot, self.waiting.popleft()))
         return out
+
+    def requeue_front(self, req) -> None:
+        """PREEMPTED re-entry: a preempted request outranks every
+        waiting one (it has already consumed service), so it re-enters
+        at the FCFS front and is re-admitted as soon as the pool covers
+        its re-prefill."""
+        self.waiting.appendleft(req)
+
+    def preemption_victim(self) -> Optional[Slot]:
+        """The youngest occupied slot (highest rid — least service
+        received under FCFS admission).  The paged engine evicts this
+        slot when the pool runs dry; the victim may be the slot whose
+        growth triggered the eviction (it then skips its decode step)."""
+        held = [s for s in self.slots if not s.free]
+        if not held:
+            return None
+        return max(held, key=lambda s: s.rid)
 
     @property
     def busy(self) -> bool:

@@ -98,6 +98,33 @@ def make_chunk_prefill_step(cfg: ArchConfig, *, axes=None,
     return _context(slot_chunk_step, rules, mesh)
 
 
+def make_paged_chunk_prefill_step(cfg: ArchConfig, *, axes,
+                                  rules: Optional[AxisRules] = None,
+                                  mesh=None, policy=None):
+    """Chunk-prefill step over the **paged** decode cache.
+
+    ``axes`` comes from ``kvcache.paged_slot_axes``: slot-addressed
+    leaves (ring caches, SSM state) are sliced/spliced per slot exactly
+    as in ``make_chunk_prefill_step``, while the paged pool leaves pass
+    through whole — the chunk addresses them via ``block_row``, the
+    (1, n_blocks) block-table row of the slot being prefilled:
+    ``step(params, cache, tokens, positions, slot, kv_len, block_row)``.
+    ``kv_len`` stays the *logical* post-write fill ``p + C``.
+    """
+    fns = model_fns(cfg)
+
+    def paged_chunk_step(params, cache, tokens, positions, slot, kv_len,
+                         block_row):
+        small = take_slot(cache, axes, slot)
+        logits, new_small = fns.forward_prefill_chunk(
+            cfg, params, small, tokens, positions, policy=policy,
+            kv_len=kv_len, block_table=block_row)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, logits, put_slot(cache, new_small, axes, slot)
+
+    return _context(paged_chunk_step, rules, mesh)
+
+
 def make_decode_step(cfg: ArchConfig, *, rules: Optional[AxisRules] = None,
                      mesh=None, policy=None):
     fns = model_fns(cfg)
@@ -137,6 +164,30 @@ def make_slot_decode_step(cfg: ArchConfig, *,
         logits, new_cache = fns.forward_decode(cfg, params, cache, token,
                                                position, policy=policy,
                                                kv_len=kv_len)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, new_cache
+
+    return _context(decode_step, rules, mesh)
+
+
+def make_paged_decode_step(cfg: ArchConfig, *,
+                           rules: Optional[AxisRules] = None, mesh=None,
+                           policy=None):
+    """Decode step over the paged decode cache (paged continuous
+    batching): ``step(params, cache, token, position, kv_len,
+    block_table)`` — the slot decode contract of
+    ``make_slot_decode_step`` plus the (slots, n_blocks) block table
+    that resolves each slot's logical KV blocks to physical pool blocks
+    (docs/paged_kv.md).  ``kv_len == 0`` still marks idle/mid-prefill
+    rows: reads skip them and their writes are routed out of bounds.
+    """
+    fns = model_fns(cfg)
+
+    def decode_step(params, cache, token, position, kv_len, block_table):
+        logits, new_cache = fns.forward_decode(cfg, params, cache, token,
+                                               position, policy=policy,
+                                               kv_len=kv_len,
+                                               block_table=block_table)
         next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_token, logits, new_cache
 

@@ -1,7 +1,14 @@
 """Serving engines — the "EIM process runner" analogue (paper §4.6):
 a deployed artifact behind a queue-driven I/O interface.
 
-Two schedulers over the same model serve steps:
+Three schedulers over the same model serve steps:
+
+* ``PagedBatchServer`` — continuous batching over a **paged KV pool**:
+  fixed-size physical KV blocks addressed through per-slot block
+  tables, with hash-based prefix sharing and preempt-and-recompute when
+  the pool runs dry (docs/paged_kv.md).  Live-token HBM replaces
+  worst-case-rectangle HBM; the two rectangle engines below remain the
+  measured baselines.
 
 * ``ContinuousBatchServer`` (the default ``BatchServer``) — slot-based
   continuous batching with **chunked pad-free prefill**: a prompt of
@@ -52,15 +59,22 @@ import numpy as np
 
 from repro.core.arch import ArchConfig
 from repro.core.quantize import policy_for, quantize_model_params
-from repro.serve.kvcache import (alloc_decode_cache, decode_cache_nbytes,
-                                 put_slot, release_slot, slot_batch_axes)
+from repro.serve.kvcache import (BlockManager, PoolExhausted,
+                                 alloc_decode_cache, alloc_paged_cache,
+                                 decode_cache_nbytes, kv_block_size,
+                                 kv_pool_block_bytes, paged_cache_keys,
+                                 paged_slot_axes, put_slot, release_slot,
+                                 slot_batch_axes)
 from repro.serve.scheduler import SlotScheduler
 from repro.serve.serve_step import (make_chunk_prefill_step,
+                                    make_paged_chunk_prefill_step,
+                                    make_paged_decode_step,
                                     make_slot_decode_step)
 
-# Decode-cache capacity granularity: one flash-decode KV block (a
-# sub-multiple of kernels/flash_decode.py's block_k, so any rounded
-# capacity tiles cleanly on every backend).
+# Decode-cache capacity granularity: one flash-decode KV block — the
+# kernels' tile choice at any rounded capacity is kv_block_size(), and
+# rounding capacity to this keeps that choice at its maximum on every
+# backend (kvcache.kv_block_size is the single source of truth).
 KV_BLOCK = 64
 
 
@@ -76,6 +90,7 @@ class Request:
     finished_at: Optional[float] = None
     admitted_step: Optional[int] = None   # decode-step clock at admission
     finished_step: Optional[int] = None
+    preemptions: int = 0            # paged engine: times evicted/recomputed
 
 
 def _check_supported(cfg: ArchConfig) -> None:
@@ -200,9 +215,27 @@ class _ServerBase:
             reqs.append(r)
         return reqs
 
+    def _chunk_call(self, slot, toks, poss, kvl):
+        """Run one chunk step for ``slot`` (the paged engine overrides
+        this to append the slot's block-table row operand)."""
+        return self._chunk_step(self.params, self.cache, toks, poss,
+                                slot.index, kvl)
+
+    def _register_prefill(self, slot, prompt) -> None:
+        """Hook at prefill completion (paged: publish prefix blocks)."""
+
+    def _release_finished(self, slot) -> None:
+        """Free a slot whose request finished (paged: refcount blocks)."""
+        self.cache = self._release(self.cache, slot.index)
+        slot.release()
+
     def _run_chunk(self, slot, step_clock: int) -> None:
         """One prefill chunk for ``slot``; flips it ACTIVE (and emits the
-        first token) when the prompt is exhausted."""
+        next token) when the prompt is exhausted.  For a fresh request
+        that token is its first; for a preempted request re-prefilling
+        ``prompt ++ generated`` (paged engine) it is a continuation —
+        the bookkeeping below is resume-aware so one implementation
+        serves every engine."""
         c = self.chunk
         prompt = slot.prompt
         p = slot.chunk_pos
@@ -212,22 +245,23 @@ class _ServerBase:
         toks[0, :r] = prompt[p:p + r]
         poss[0, :r] = np.arange(p, p + r, dtype=np.int32)
         kvl = jnp.asarray([p + c], jnp.int32)
-        ntok, _, self.cache = self._chunk_step(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(poss),
-            slot.index, kvl)
+        ntok, _, self.cache = self._chunk_call(
+            slot, jnp.asarray(toks), jnp.asarray(poss), kvl)
         slot.chunk_pos += r
         if slot.chunk_pos < len(prompt):
             return
-        # final chunk: its last real row's logits are the first token
+        # final chunk: its last real row's logits are the next token
         req = self.requests[slot.rid]
+        self._register_prefill(slot, prompt)
         tok0 = int(np.asarray(ntok)[0, r - 1])
         req.tokens.append(tok0)
-        req.first_token_at = time.perf_counter()
+        if req.first_token_at is None:
+            req.first_token_at = time.perf_counter()
         slot.begin_decode()
-        if req.max_new_tokens <= 1 or tok0 == self.eos_id:
+        slot.generated = len(req.tokens)
+        if slot.generated >= slot.max_new or tok0 == self.eos_id:
             self._finish(req, step_clock)
-            self.cache = self._release(self.cache, slot.index)
-            slot.release()
+            self._release_finished(slot)
         else:
             self._cur[slot.index] = tok0
 
@@ -273,13 +307,9 @@ class ContinuousBatchServer(_ServerBase):
         self.max_new = int(max_new_tokens)
         self.max_new_cap = int(max_new_cap or max(self.max_new, 1))
         self.capacity = self._slot_capacity()
-        # effective flash-decode block at this capacity (mirrors the
-        # kernel's choice: min(128, S), halved until it divides S) —
-        # the HBM-read metric quantizes to it
-        bk = min(128, self.capacity)
-        while self.capacity % bk and bk > 8:
-            bk //= 2
-        self._kv_block = bk
+        # effective flash-decode block at this capacity — the HBM-read
+        # metric quantizes to it (same helper the kernels use)
+        self._kv_block = kv_block_size(self.capacity)
         self.eos_id = eos_id
         self.sched = SlotScheduler(self.n_slots)
         self._init_slot_steps(self.n_slots)
@@ -494,6 +524,394 @@ class StaticBatchServer(_ServerBase):
         self.metrics["precision"] = self.precision
         self.metrics["prefill_chunk"] = self.chunk
         self.metrics["kv_cache_bytes"] = decode_cache_nbytes(self.cache)
+        return self.metrics
+
+
+class PagedBatchServer(_ServerBase):
+    """Continuous batching over a **paged KV pool** (docs/paged_kv.md).
+
+    The contiguous engine holds a ``slots × capacity`` rectangle per
+    slot: after kv_len bounding the dead tail is never *read*, but it is
+    still *held* in HBM, so concurrency is priced at the worst case.
+    Here the full-attention KV lives in a global pool of fixed-size
+    physical blocks (block == the flash-decode KV block), each slot maps
+    logical KV positions to physical blocks through a **block table**
+    that rides the decode signature into the kernels' index maps, and a
+    host-side ``BlockManager`` owns the pool:
+
+    * admission gates on the free-block watermark (prompt blocks must be
+      coverable), not merely on a free slot;
+    * identical prompt prefixes **share physical blocks** at block
+      granularity via hash-chain prefix caching (refcounted, never
+      written — chunked prefill starts at the shared boundary);
+    * when the pool runs dry mid-decode the youngest slot is
+      **preempted**: blocks freed, request re-queued at the FCFS front,
+      re-prefilled over ``prompt ++ generated`` through the ordinary
+      chunked-prefill path (preempt-and-recompute; greedy decoding makes
+      the recompute token-exact).
+
+    Ring (sliding-window) caches and SSM state stay slot-addressed —
+    they are already minimal (O(window)/O(state) per slot, no capacity
+    tail), so paging them buys nothing; a pure-SSM family degenerates to
+    plain continuous batching with pool bookkeeping disabled.  Prefix
+    sharing is enabled only where *all* persistent state lives in the
+    pool (uniform full-attention families); preemption works everywhere
+    because recompute rebuilds slot-local state from scratch.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *,
+                 slots: Optional[int] = None,
+                 max_prompt: Optional[int] = None,
+                 prefill_chunk: int = 8,
+                 prefill_token_budget: Optional[int] = None,
+                 max_new_tokens: int = 16,
+                 max_new_cap: Optional[int] = None,
+                 eos_id: Optional[int] = None,
+                 use_artifact: bool = False,
+                 pool_blocks: Optional[int] = None,
+                 block_size: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 batch_size: Optional[int] = None,
+                 prompt_len: Optional[int] = None,
+                 precision: str = "float"):
+        super().__init__(cfg, params, precision)
+        self.n_slots = int(slots or batch_size or 4)
+        self.max_prompt = int(max_prompt or prompt_len or 32)
+        self.chunk = int(prefill_chunk)
+        self.prefill_budget = int(prefill_token_budget or self.chunk)
+        self.max_new = int(max_new_tokens)
+        self.max_new_cap = int(max_new_cap or max(self.max_new, 1))
+        self.capacity = self._slot_capacity()
+        # pool block: the kernel tile by default (maximum DMA width);
+        # any smaller divisor of capacity (≥ 8, still tileable) trades
+        # DMA width for allocation granularity / prefix-hit resolution
+        self.block_size = self._kv_block = int(
+            block_size or kv_block_size(self.capacity))
+        if self.capacity % self.block_size or self.block_size < 8:
+            raise ValueError(
+                f"block_size {self.block_size} must divide capacity "
+                f"{self.capacity} and be >= 8")
+        if self.capacity % self.chunk:
+            raise ValueError(
+                f"prefill_chunk {self.chunk} must divide the rounded "
+                f"capacity {self.capacity} (paged blocks may not "
+                f"overflow the table)")
+        self.n_table = self.capacity // self.block_size
+        # default pool == the contiguous rectangle's block count (no
+        # preemption possible); size it below slots × capacity to trade
+        # HBM for occasional preempt-and-recompute.  A pool smaller than
+        # one worst-case request is permitted (real requests may be
+        # smaller); an individually unservable request raises at
+        # admission time instead of deadlocking.
+        self.pool_blocks = int(pool_blocks or self.n_slots * self.n_table)
+        if self.pool_blocks < 1:
+            raise ValueError("pool_blocks must be >= 1")
+        self.eos_id = eos_id
+        self.paged_keys = paged_cache_keys(cfg)
+        # prefix reuse requires every layer's persistent decode state to
+        # be (a) a function of the shared tokens alone and (b) resident
+        # in the paged pool: uniform full-attention families only —
+        # ring windows and SSM recurrences are slot-local and must be
+        # rebuilt by an actual prefill.
+        from repro.models.params import layer_pattern
+        kind = layer_pattern(cfg)["kind"]
+        share = bool(prefix_cache and self.paged_keys
+                     and kind in ("uniform_dense", "uniform_moe"))
+        self.manager = BlockManager(self.pool_blocks, self.block_size,
+                                    prefix_cache=share)
+        self._block_bytes = kv_pool_block_bytes(cfg, self.capacity,
+                                                self.prec,
+                                                self.block_size)
+        self.sched = SlotScheduler(self.n_slots)
+        self._init_paged_steps()
+        self.preemptions = 0
+        self._prompt_blocks_seen = 0
+        # (rid, pool fingerprint) of the last admission that failed the
+        # free-block watermark — suppresses per-step re-matching
+        self._blocked_state = None
+        self.artifact = None
+        if use_artifact:
+            from repro.core.eon_compiler import compile_serve_decode
+            self.artifact = compile_serve_decode(
+                cfg, self.params, slots=self.n_slots,
+                capacity=self.capacity, policy=self.prec,
+                pool_blocks=self.pool_blocks,
+                block_size=self.block_size)
+            self.decode = self.artifact.rehydrate()
+        else:
+            self.decode = jax.jit(
+                make_paged_decode_step(cfg, policy=self.prec),
+                donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    def _init_paged_steps(self) -> None:
+        axes = paged_slot_axes(self.cfg, self.n_slots, self.capacity,
+                               self.pool_blocks, self.prec,
+                               self.block_size)
+        self._chunk_step = jax.jit(
+            make_paged_chunk_prefill_step(self.cfg, axes=axes,
+                                          policy=self.prec),
+            donate_argnums=(1,))
+        self.cache = alloc_paged_cache(self.cfg, self.n_slots,
+                                       self.capacity, self.pool_blocks,
+                                       self.prec, self.block_size)
+        # slot-addressed leaves (ring caches, SSM state, local_pos) are
+        # reset per admission exactly as in the contiguous engine; pool
+        # leaves need no scrub — a new tenant's writes precede its kv_len
+        shared = set(self.paged_keys) | {"pool_pos"}
+        slot_keys = tuple(k for k in self.cache if k not in shared)
+        self._slot_keys = slot_keys
+        if slot_keys:
+            slot_axes = {k: axes[k] for k in slot_keys}
+            full_empty = alloc_decode_cache(self.cfg, 1, self.capacity,
+                                            self.prec)
+            self._empty_row = {k: full_empty[k] for k in slot_keys}
+
+            def reset(cache, empty, slot):
+                out = dict(cache)
+                out.update(put_slot({k: cache[k] for k in slot_keys},
+                                    empty, slot_axes, slot))
+                return out
+
+            self._reset = jax.jit(reset, donate_argnums=(0,))
+        else:
+            self._reset = None
+        self._cur = np.zeros((self.n_slots,), np.int32)
+        # host mirror of the device block-table operand (0 = unmapped:
+        # always a valid physical block; dead entries are fenced by
+        # kv_len, not by the table)
+        self.block_table = np.zeros((self.n_slots, self.n_table), np.int32)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompts: List[np.ndarray],
+               max_new_tokens: Union[int, Sequence[int], None] = None
+               ) -> List[Request]:
+        reqs = self._make_requests(prompts, max_new_tokens)
+        for r in reqs:
+            self.sched.enqueue(r)
+        return reqs
+
+    # ------------------------------------------------------------------
+    def _set_table_row(self, slot) -> None:
+        self.block_table[slot.index, :] = 0
+        if slot.blocks:
+            self.block_table[slot.index, :len(slot.blocks)] = slot.blocks
+
+    def _free_slot(self, slot) -> None:
+        """FREE path: return block references (prefix-cached blocks
+        survive via the registry's own reference); no device-side scrub
+        — kv_len == 0 fences the slot until re-admission."""
+        self.manager.free(slot.blocks)
+        slot.release()
+        self._set_table_row(slot)
+
+    def _preempt(self, slot) -> None:
+        """PREEMPTED: evict ``slot`` and re-queue its request at the
+        FCFS front; re-admission re-prefills ``prompt ++ generated``
+        (the request keeps every token already emitted)."""
+        req = self.requests[slot.rid]
+        self.manager.free(slot.blocks)
+        slot.release()
+        self._set_table_row(slot)
+        req.preemptions += 1
+        self.preemptions += 1
+        self.sched.requeue_front(req)
+
+    def _admit(self, decode_steps: int) -> None:
+        """Admission by free-block watermark, FCFS: the queue head is
+        admitted when a slot is free AND the pool covers its prefill
+        rows beyond any prefix-cache hit; otherwise it (and everything
+        behind it) waits."""
+        while self.sched.waiting:
+            free = self.sched.free_slots()
+            if not free:
+                return
+            req = self.sched.waiting[0]
+            seq = (np.concatenate([req.prompt,
+                                   np.asarray(req.tokens, np.int32)])
+                   if req.tokens else req.prompt)
+            if not self.paged_keys:
+                # pure-SSM family: no pooled leaves, no block accounting
+                shared, start, need = [], 0, 0
+            else:
+                # a blocked head request is retried every scheduler
+                # iteration: skip the (hashing + LRU-touching) prefix
+                # match outright unless the pool or registry changed
+                # since it last failed the watermark
+                state = (req.rid, self.manager.free_blocks,
+                         self.manager.live_blocks,
+                         self.manager.registry_size())
+                if state == self._blocked_state:
+                    return
+                shared = self.manager.match_prefix(seq)
+                start = len(shared) * self.block_size
+                # chunk-rounded prefill rows must fit the table; drop
+                # shared blocks if a misaligned chunk boundary overflows
+                # (dropped blocks are not used → not hits)
+                while shared and (start + _chunk_rows(len(seq) - start,
+                                                      self.chunk)
+                                  > self.capacity):
+                    self.manager.unmatch(shared[-1:])
+                    shared = shared[:-1]
+                    start -= self.block_size
+                rows = start + _chunk_rows(len(seq) - start, self.chunk)
+                need = -(-rows // self.block_size) - len(shared)
+                if not self.manager.can_alloc(need):
+                    # undo the match exactly — refcounts AND accounting;
+                    # nothing was admitted, so nothing is counted
+                    self.manager.unmatch(shared, whole_query=True)
+                    if all(s.free for s in self.sched.slots):
+                        # nothing running that could ever free blocks:
+                        # this request is individually unservable
+                        raise PoolExhausted(
+                            f"request rid={req.rid} needs {need} KV "
+                            f"blocks of {self.block_size} but the pool "
+                            f"holds only {self.pool_blocks}")
+                    self._blocked_state = state
+                    return
+                self._prompt_blocks_seen += max(
+                    (len(seq) - 1) // self.block_size, 0)
+            self._blocked_state = None
+            slot = free[0]
+            self.sched.waiting.popleft()
+            blocks = shared + self.manager.alloc(need)
+            if self._reset is not None:
+                self.cache = self._reset(self.cache, self._empty_row,
+                                         slot.index)
+            slot.occupy(req.rid, seq, req.max_new_tokens)
+            slot.blocks = blocks
+            slot.chunk_pos = start          # prefill starts past the hit
+            self._set_table_row(slot)
+            if req.admitted_step is None:
+                req.admitted_step = decode_steps
+
+    def _chunk_call(self, slot, toks, poss, kvl):
+        """Base chunk step plus the slot's block-table row operand."""
+        row = jnp.asarray(self.block_table[slot.index:slot.index + 1])
+        return self._chunk_step(self.params, self.cache, toks, poss,
+                                slot.index, kvl, row)
+
+    def _register_prefill(self, slot, prompt) -> None:
+        """Publish the fully-written prompt blocks to the prefix cache
+        (a no-op unless sharing is enabled for this family)."""
+        self.manager.register_prefix(prompt, slot.blocks)
+
+    def _release_finished(self, slot) -> None:
+        self._free_slot(slot)
+
+    def _grow_for_decode(self, active) -> list:
+        """Ensure every active slot owns the block this step's write
+        lands in, preempting the youngest occupied slot (LIFO, vLLM-
+        style) whenever the pool runs dry.  Oldest slots grow first, so
+        under pressure service order degenerates gracefully to FCFS."""
+        if not self.paged_keys:
+            return active                   # pure-SSM: nothing paged
+        for s in sorted(active, key=lambda x: x.rid):
+            while not s.free and s.position // self.block_size \
+                    >= len(s.blocks):
+                try:
+                    s.blocks.extend(self.manager.alloc(1))
+                    self.block_table[s.index,
+                                     len(s.blocks) - 1] = s.blocks[-1]
+                except PoolExhausted:
+                    victim = self.sched.preemption_victim()
+                    self._preempt(victim)
+                    if victim is s:
+                        break
+        return [s for s in active if s.active]
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict[str, float]:
+        """Serve until queue and slots drain; returns latency metrics
+        plus pool accounting (utilization, prefix hits, preemptions)."""
+        t0 = time.perf_counter()
+        self._served: List[Request] = []
+        decode_steps = 0
+        prefill_chunks = 0
+        occupancy: List[int] = []
+        kv_fill: List[int] = []
+        kv_raw: List[int] = []
+        live_hist: List[int] = []
+
+        while self.sched.busy:
+            self._admit(decode_steps)
+
+            spent = 0
+            for slot in sorted(self.sched.prefilling_slots(),
+                               key=lambda s: s.rid):
+                while slot.prefilling and spent < self.prefill_budget:
+                    self._run_chunk(slot, decode_steps)
+                    prefill_chunks += 1
+                    spent += self.chunk
+                if spent >= self.prefill_budget:
+                    break
+
+            active = self._grow_for_decode(self.sched.active_slots())
+            if not active:
+                continue
+
+            tok = np.array(self._cur)
+            pos = np.zeros((self.n_slots,), np.int32)
+            kvl = np.zeros((self.n_slots,), np.int32)
+            for s in active:
+                pos[s.index] = s.position
+                kvl[s.index] = s.position + 1
+            ntok, _, self.cache = self.decode(
+                self.params, self.cache, tok, pos, kvl,
+                jnp.asarray(self.block_table))
+            decode_steps += 1
+            occupancy.append(len(active))
+            live_hist.append(self.manager.live_blocks)
+            blocks = np.maximum(-(-kvl // self._kv_block), 1)
+            kv_fill.append(int(blocks.sum()) * self._kv_block)
+            kv_raw.append(int(kvl.sum()))
+            ntok_h = np.asarray(ntok)
+
+            for s in active:
+                req = self.requests[s.rid]
+                t = int(ntok_h[s.index])
+                req.tokens.append(t)
+                s.advance()
+                self._cur[s.index] = t
+                if s.generated >= s.max_new or t == self.eos_id:
+                    self._finish(req, decode_steps)
+                    self._free_slot(s)
+
+        served = self._served
+        wall = time.perf_counter() - t0
+        self.metrics = _summarize(served, wall, engine="paged",
+                                  decode_steps=decode_steps,
+                                  prefills=prefill_chunks,
+                                  occupancy=occupancy,
+                                  n_slots=self.n_slots)
+        self.metrics["precision"] = self.precision
+        self.metrics["prefill_chunk"] = self.chunk
+        self.metrics["kv_cache_bytes"] = decode_cache_nbytes(self.cache)
+        self.metrics["kv_block_bytes"] = self._block_bytes
+        self.metrics["block_size"] = self.block_size
+        self.metrics["pool_blocks"] = self.pool_blocks
+        self.metrics["preemptions"] = self.preemptions
+        st = self.manager.stats
+        self.metrics["prefix_hit_blocks"] = st["prefix_hit_blocks"]
+        self.metrics["prefix_hit_rate"] = (
+            st["prefix_hit_blocks"] / self._prompt_blocks_seen
+            if self._prompt_blocks_seen else 0.0)
+        if live_hist:
+            self.metrics["pool_live_blocks_mean"] = float(
+                np.mean(live_hist))
+            self.metrics["pool_live_blocks_peak"] = int(np.max(live_hist))
+            self.metrics["pool_utilization"] = (
+                float(np.mean(live_hist)) / self.pool_blocks)
+            self.metrics["kv_live_bytes_peak"] = (
+                int(np.max(live_hist)) * self._block_bytes)
+            self.metrics["kv_live_bytes_mean"] = (
+                float(np.mean(live_hist)) * self._block_bytes)
+        if kv_fill:
+            denom = self.n_slots * self.capacity
+            self.metrics["kv_read_frac"] = float(np.mean(kv_fill) / denom)
+            self.metrics["kv_fill_frac"] = float(np.mean(kv_raw) / denom)
+        if self.artifact is not None:
+            self.metrics["artifact_bytes"] = self.artifact.artifact_bytes
         return self.metrics
 
 

@@ -14,9 +14,9 @@ import pytest
 from repro import configs
 from repro.models import api
 from repro.models.params import init_params
-from repro.serve.kvcache import (alloc_decode_cache, grow_cache,
-                                 put_slot, release_slot, slot_batch_axes,
-                                 take_slot)
+from repro.models.transformer import grow_cache
+from repro.serve.kvcache import (alloc_decode_cache, put_slot,
+                                 release_slot, slot_batch_axes, take_slot)
 from repro.serve.scheduler import Slot, SlotScheduler
 from repro.serve.server import (ContinuousBatchServer, StaticBatchServer,
                                 _chunk_rows)
